@@ -1,0 +1,67 @@
+"""GA convergence benchmark (paper §4.1.2 parameters) + narrowing funnel
+(§3.2) + mixed-environment selection (§3.3)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.arithmetic_intensity import himeno_unit_costs
+from repro.core.candidates import NarrowingConfig, narrow_and_measure
+from repro.core.device_select import Destination, select_destination
+from repro.core.fitness import UserRequirement, fitness
+from repro.core.ga import GAConfig
+from repro.core.offload_search import search_himeno
+from repro.core.verifier import (
+    FPGA, GPU_2080TI, MANYCORE, HimenoCalibratedBackend,
+)
+
+
+def run() -> list[tuple]:
+    rows = []
+    be = HimenoCalibratedBackend()
+
+    # GA convergence trajectory (best fitness per generation)
+    res = search_himeno(be, GAConfig(population=12, generations=12, seed=1))
+    traj = [max(r.fitness for r in gen) for gen in res.history]
+    first, last = traj[0], traj[-1]
+    gen_90 = next(i for i, f in enumerate(traj)
+                  if f >= first + 0.9 * (last - first))
+    rows.append(("ga_convergence_gen90", float(gen_90),
+                 f"best {first:.5f}->{last:.5f} evals={res.evaluations} "
+                 f"cache_hits={res.cache_hits}"))
+
+    # FPGA-path narrowing funnel: counts per stage + measured trials
+    units = himeno_unit_costs((512, 256, 256), iters=62)
+    trials = {"n": 0}
+
+    def measure(pattern):
+        trials["n"] += 1
+        bits = [1 if u in pattern else 0 for u in be.unit_names()]
+        return be.measure_bits(bits)
+
+    t0 = time.perf_counter()
+    rep = narrow_and_measure(units, measure, NarrowingConfig())
+    rows.append(("fpga_narrowing_funnel", time.perf_counter() - t0,
+                 f"{len(rep.all_units)}->AI:{len(rep.after_intensity)}"
+                 f"->trip:{len(rep.after_tripcount)}"
+                 f"->res:{len(rep.after_resource)}"
+                 f"->measured:{trials['n']} best={rep.best_pattern}"))
+
+    # Mixed-environment selection: full scoring + early-exit
+    def dest(profile):
+        def search():
+            b = HimenoCalibratedBackend(device=profile)
+            r = search_himeno(b, GAConfig(population=8, generations=6, seed=0))
+            return r.best.genome, r.best.measurement
+
+        return Destination(profile.name, profile.verify_cost_s, search)
+
+    full = select_destination([dest(GPU_2080TI), dest(MANYCORE), dest(FPGA)])
+    rows.append(("mixed_env_full_scan", full.verification_spent_s,
+                 f"chosen={full.chosen} order={full.order}"))
+    early = select_destination(
+        [dest(GPU_2080TI), dest(MANYCORE), dest(FPGA)],
+        requirement=UserRequirement(max_time_s=60.0))
+    rows.append(("mixed_env_early_exit", early.verification_spent_s,
+                 f"chosen={early.chosen} skipped={early.skipped} "
+                 f"early={early.early_exit}"))
+    return rows

@@ -1,0 +1,87 @@
+"""§Perf hillclimb harness: compile a cell under a (decisions, rule-override,
+config-change) variant and report the three roofline terms + memory.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --arch llama3.2-3b \
+        --shape prefill_32k --override seq_inner=model
+
+Each invocation is one hypothesis→measure cycle; results append to
+results/hillclimb.jsonl for the EXPERIMENTS.md §Perf log.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+
+def parse_kv(items):
+    out = {}
+    for item in items or []:
+        k, v = item.split("=", 1)
+        if v in ("None", "none", "null"):
+            out[k] = None
+        elif v in ("True", "False"):
+            out[k] = v == "True"
+        elif "," in v:
+            out[k] = tuple(v.split(","))
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--override", action="append",
+                    help="sharding rule override, e.g. seq_inner=model")
+    ap.add_argument("--cfg", action="append",
+                    help="config change, e.g. accum=8")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--log", default="results/hillclimb.jsonl")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_cell
+
+    overrides = parse_kv(args.override)
+    cfg_changes = parse_kv(args.cfg)
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   overrides=overrides or None,
+                   cfg_changes=cfg_changes or None)
+    if rec["status"] != "ok":
+        print(json.dumps(rec, indent=1)[:2000])
+        raise SystemExit(1)
+
+    p = rec["probe"]["total_per_device"]
+    t_c = p["flops"] / 197e12
+    t_m_hlo = p["bytes"] / 819e9
+    t_x = p["collective_bytes"] / 50e9
+    peak = rec["memory"]["peak_per_device"] / 2**30
+    summary = {
+        "tag": args.tag, "arch": args.arch, "shape": args.shape,
+        "mesh": rec["mesh"], "overrides": overrides, "cfg": cfg_changes,
+        "t_compute": round(t_c, 4), "t_memory_hlo": round(t_m_hlo, 4),
+        "t_collective": round(t_x, 4),
+        "flops_per_dev": p["flops"], "coll_bytes_per_dev": p["collective_bytes"],
+        "peak_gib": round(peak, 2),
+        "fits": peak < 16 * 0.92,
+        "compile_s": rec["compile_s"],
+    }
+    os.makedirs(os.path.dirname(args.log), exist_ok=True)
+    with open(args.log, "a") as f:
+        f.write(json.dumps(summary) + "\n")
+    print(json.dumps(summary, indent=1))
+
+
+if __name__ == "__main__":
+    main()

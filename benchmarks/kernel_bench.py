@@ -1,0 +1,71 @@
+"""Kernel micro-benchmarks: wall time of the jitted reference paths on CPU
+(the Pallas kernels themselves target TPU; interpret mode is not a timing
+proxy) + analytic TPU-roofline projections for the kernel shapes."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.power import TPU_V5E
+from repro.kernels.himeno.ops import himeno_run
+from repro.kernels.himeno.ref import FLOPS_PER_POINT, himeno_init
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.ref import rms_norm_ref
+from repro.kernels.wkv.ref import wkv_ref
+
+
+def _time(fn, *args, reps=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run() -> list[tuple]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # Himeno sweep (paper workload) — measured CPU + projected TPU roofline
+    grid = (65, 65, 129)
+    st = himeno_init(grid)
+    us = _time(lambda s: himeno_run(s, 2, impl="ref"), st)
+    interior = (grid[0] - 2) * (grid[1] - 2) * (grid[2] - 2)
+    flops = 2 * FLOPS_PER_POINT * interior
+    bytes_ = 2 * 13 * grid[0] * grid[1] * grid[2] * 4
+    tpu_us = max(flops / TPU_V5E.peak_flops, bytes_ / TPU_V5E.hbm_bw) * 1e6
+    rows.append(("himeno_2sweeps_cpu", us,
+                 f"grid={grid} tpu_roofline={tpu_us:.1f}us "
+                 f"AI={flops/bytes_:.2f}"))
+
+    # Flash attention reference
+    q, k, v = (jax.random.normal(kk, (4, 8, 512, 64), jnp.bfloat16)
+               for kk in jax.random.split(key, 3))
+    fa = jax.jit(lambda q, k, v: attention_ref(q, k, v))
+    us = _time(fa, q, k, v)
+    fl = 4 * 4 * 8 * 512 * 512 * 64
+    rows.append(("flash_attention_ref_b4h8s512", us,
+                 f"tpu_compute={fl/TPU_V5E.peak_flops*1e6:.1f}us"))
+
+    # RMSNorm
+    x = jax.random.normal(key, (32, 512, 1024), jnp.bfloat16)
+    sc = jnp.ones((1024,), jnp.float32)
+    rn = jax.jit(lambda x, s: rms_norm_ref(x, s))
+    us = _time(rn, x, sc)
+    by = 2 * x.size * 2
+    rows.append(("rmsnorm_ref_32x512x1024", us,
+                 f"tpu_memory={by/TPU_V5E.hbm_bw*1e6:.1f}us"))
+
+    # WKV
+    r, k2, v2 = (jax.random.normal(kk, (2, 8, 256, 64)) * 0.5
+                 for kk in jax.random.split(key, 3))
+    lw = -jnp.exp(jax.random.normal(key, (2, 8, 256, 64)) * 0.5)
+    u = jnp.zeros((8, 64))
+    wk = jax.jit(lambda *a: wkv_ref(*a)[0])
+    us = _time(wk, r, k2, v2, lw, u)
+    rows.append(("wkv_ref_b2h8s256d64", us, "sequential-scan oracle"))
+    return rows

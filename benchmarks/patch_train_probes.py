@@ -1,0 +1,45 @@
+"""Recompute dry-run probes for train cells (two-accum collective
+separation landed after the sweep) — updates records in place."""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import glob
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+
+def main():
+    from repro.configs import SHAPES, get_config
+    from repro.launch.dryrun import probe_costs
+    from repro.launch.mesh import make_production_mesh
+
+    for path in sorted(glob.glob("results/dryrun/*train_4k*.json")):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        if rec.get("probe", {}).get("collective_method") == "two-accum":
+            print(f"[skip] {path}")
+            continue
+        multi = rec["mesh"].get("pod", 1) > 1
+        t0 = time.time()
+        mesh = make_production_mesh(multi_pod=multi)
+        cfg = get_config(rec["arch"])
+        probe = probe_costs(cfg, SHAPES["train_4k"], mesh, None)
+        probe["collective_method"] = "two-accum"
+        rec["probe"] = probe
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[ok] {path} ({time.time()-t0:.0f}s) coll/dev="
+              f"{probe['total_per_device']['collective_bytes']:.3e}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Benchmark harness — one section per paper table/figure plus the scale
+deliverables. Prints ``name,us_per_call,derived`` CSV.
+
+Sections:
+  fig5_*          — the paper's Fig.5 Watt·sec table (calibrated + measured)
+  ga_*            — GA convergence (paper §4.1.2 params)
+  fpga_*          — §3.2 narrowing funnel
+  mixed_env_*     — §3.3 staged destination selection
+  roofline_*      — §Roofline summary per dry-run cell (when records exist)
+  kernel_*        — kernel micro-benchmarks / TPU projections
+  e2e_*           — end-to-end train/serve drivers (reduced configs)
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+
+def main() -> None:
+    rows: list[tuple] = []
+
+    from benchmarks import ga_bench, himeno_bench, kernel_bench
+
+    rows += himeno_bench.run()
+    rows += ga_bench.run()
+    rows += kernel_bench.run()
+
+    # end-to-end drivers (reduced configs, CPU)
+    import time
+
+    from repro.launch.serve import serve
+    from repro.launch.train import train
+
+    t = train("llama3.2-3b", use_reduced=True, steps=30, global_batch=4,
+              seq_len=32, log_every=0)
+    rows.append(("e2e_train_30steps", t["wall_s"] * 1e6 / max(t["steps"], 1),
+                 f"loss {t['initial_loss']:.3f}->{t['final_loss']:.3f}"))
+    s = serve("llama3.2-3b", use_reduced=True, num_requests=4, slots=2,
+              max_new_tokens=4)
+    rows.append(("e2e_serve_4req", s["wall_s"] * 1e6,
+                 f"{s['tokens_per_s']:.1f} tok/s waves={s['waves']}"))
+
+    # roofline summary (if the dry-run has produced records)
+    try:
+        from benchmarks.roofline import table
+
+        rl = table("results/dryrun")
+        for r in rl:
+            rows.append((f"roofline_{r.arch}_{r.shape}_{r.mesh}",
+                         r.step_time * 1e6,
+                         f"dom={r.dominant} useful={r.useful_ratio:.2f} "
+                         f"W={r.watts_per_chip:.0f} fit={'Y' if r.fits else 'N'}"))
+        if not rl:
+            rows.append(("roofline_records", 0.0, "no dry-run records yet"))
+    except Exception as e:  # records absent in fresh checkouts
+        rows.append(("roofline_records", 0.0, f"unavailable: {e}"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Mixed-environment destination selection (paper §3.3).
+
+Three offload destinations (many-core CPU, GPU, FPGA) are verified in
+cheap-to-expensive order. Each verification runs the full GA offload search
+on that destination's calibrated profile. With a user requirement set, the
+search stops at the first satisfying destination (the paper's early exit —
+FPGA's hours-long compile never happens); without one, all are verified and
+the best (time)^-1/2 × (energy)^-1/2 score wins.
+
+    PYTHONPATH=src python examples/mixed_environment.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import Destination, GAConfig, UserRequirement, select_destination
+from repro.core.offload_search import search_himeno
+from repro.core.verifier import FPGA, GPU_2080TI, MANYCORE, HimenoCalibratedBackend
+
+
+def make_destination(profile):
+    def run_search():
+        backend = HimenoCalibratedBackend(device=profile)
+        result = search_himeno(backend, GAConfig(population=8, generations=8,
+                                                 seed=0))
+        return result.best.genome, result.best.measurement
+
+    return Destination(profile.name, profile.verify_cost_s, run_search)
+
+
+def show(rep, title):
+    print(f"--- {title} ---")
+    print(f"verification order: {rep.order}")
+    for name, m in rep.verified.items():
+        print(f"  {name:<13} t={m.time_s:7.2f}s  W={m.avg_watts:6.1f}  "
+              f"E={m.energy_ws:8.1f} W·s")
+    if rep.skipped:
+        print(f"  skipped (never verified): {rep.skipped}")
+    print(f"chosen: {rep.chosen}   "
+          f"verification cost spent: {rep.verification_spent_s:.0f} s\n")
+
+
+def main():
+    dests = [make_destination(p) for p in (GPU_2080TI, MANYCORE, FPGA)]
+    show(select_destination(dests), "no requirement: verify all, best score")
+    req = UserRequirement(max_time_s=60.0)
+    show(select_destination(dests, requirement=req),
+         "requirement t<=60s: early exit (the 4-hour FPGA compile is skipped)")
+
+
+if __name__ == "__main__":
+    main()

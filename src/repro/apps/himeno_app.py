@@ -1,0 +1,220 @@
+"""The paper's §4 evaluation workload: Himeno benchmark with 13 offloadable
+loop statements, runnable under any CPU/device placement genome.
+
+Mirrors the paper's setup: the CPU path is NumPy (the paper's Python/NumPy),
+the device path is JAX-jitted (the paper's CuPy). Unit boundaries are the 13
+parallelizable loop statements the paper's Clang step finds; arrays migrate
+between host and device only at placement boundaries, so the GA can discover
+the transfer-batching behaviour of [31] (contiguous device units keep
+intermediates resident — no per-loop transfers).
+
+Power is modeled with the paper's own measured constants (27 W host,
++82 W accelerator-active → 109 W); time is genuinely measured wall-clock.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fitness import Measurement
+from repro.core.power import PaperPowerModel
+
+UNIT_NAMES = (
+    "init_p", "init_a012", "init_a3", "init_b", "init_c", "init_bnd",
+    "init_wrk1", "init_wrk2",
+    "jacobi_stencil", "gosa_reduction", "wrk2_write", "p_update",
+    "final_residual",
+)
+LOOP_UNITS = ("jacobi_stencil", "gosa_reduction", "wrk2_write", "p_update")
+OMEGA = 0.8
+
+
+# ---------------------------------------------------------------------------
+# Unit implementations — NumPy (host) and JAX (device)
+# ---------------------------------------------------------------------------
+
+
+def _np_stencil(p, a, b, c, bnd, wrk1):
+    C = slice(1, -1)
+    P, N = slice(2, None), slice(0, -2)
+    s0 = (a[0][C, C, C] * p[P, C, C] + a[1][C, C, C] * p[C, P, C]
+          + a[2][C, C, C] * p[C, C, P]
+          + b[0][C, C, C] * (p[P, P, C] - p[P, N, C] - p[N, P, C] + p[N, N, C])
+          + b[1][C, C, C] * (p[C, P, P] - p[C, N, P] - p[C, P, N] + p[C, N, N])
+          + b[2][C, C, C] * (p[P, C, P] - p[N, C, P] - p[P, C, N] + p[N, C, N])
+          + c[0][C, C, C] * p[N, C, C] + c[1][C, C, C] * p[C, N, C]
+          + c[2][C, C, C] * p[C, C, N] + wrk1[C, C, C])
+    return (s0 * a[3][C, C, C] - p[C, C, C]) * bnd[C, C, C]
+
+
+@jax.jit
+def _jx_stencil(p, a, b, c, bnd, wrk1):
+    C = slice(1, -1)
+    P, N = slice(2, None), slice(0, -2)
+    s0 = (a[0][C, C, C] * p[P, C, C] + a[1][C, C, C] * p[C, P, C]
+          + a[2][C, C, C] * p[C, C, P]
+          + b[0][C, C, C] * (p[P, P, C] - p[P, N, C] - p[N, P, C] + p[N, N, C])
+          + b[1][C, C, C] * (p[C, P, P] - p[C, N, P] - p[C, P, N] + p[C, N, N])
+          + b[2][C, C, C] * (p[P, C, P] - p[N, C, P] - p[P, C, N] + p[N, C, N])
+          + c[0][C, C, C] * p[N, C, C] + c[1][C, C, C] * p[C, N, C]
+          + c[2][C, C, C] * p[C, C, N] + wrk1[C, C, C])
+    return (s0 * a[3][C, C, C] - p[C, C, C]) * bnd[C, C, C]
+
+
+@jax.jit
+def _jx_gosa(ss):
+    return jnp.sum(jnp.square(ss))
+
+
+@jax.jit
+def _jx_wrk2(p, ss):
+    return p.at[1:-1, 1:-1, 1:-1].add(OMEGA * ss)
+
+
+@dataclass
+class HimenoApp:
+    """Executable Himeno with per-unit CPU/device placement."""
+
+    grid: tuple[int, int, int] = (17, 17, 33)
+    iters: int = 4
+    power: PaperPowerModel = field(default_factory=PaperPowerModel)
+
+    # ------------------------------------------------------------------
+    def run(self, placement: dict[str, int], *, budget_s: Optional[float] = None
+            ) -> Measurement:
+        """placement: unit name -> 0 (CPU/NumPy) or 1 (device/JAX).
+
+        Returns a Measurement with measured wall time and modeled energy."""
+        t0 = time.perf_counter()
+        t_device = 0.0
+        i, j, k = self.grid
+
+        def on_dev(name):
+            return bool(placement.get(name, 0))
+
+        def timed(dev: bool, fn, *args):
+            nonlocal t_device
+            ts = time.perf_counter()
+            out = fn(*args)
+            if dev:
+                out_sync = jax.tree.map(
+                    lambda x: x.block_until_ready()
+                    if isinstance(x, jax.Array) else x, out)
+                t_device += time.perf_counter() - ts
+                return out_sync
+            return out
+
+        def to_dev(x):
+            return jnp.asarray(x)
+
+        def to_host(x):
+            return np.asarray(x)
+
+        # --- init units (the paper's initmt loops) -------------------------
+        shape = self.grid
+
+        def init_unit(name, np_fn, jx_fn):
+            dev = on_dev(name)
+            return timed(dev, jx_fn if dev else np_fn)
+
+        kk = np.arange(k, dtype=np.float32)
+        p = init_unit(
+            "init_p",
+            lambda: np.broadcast_to(((kk / (k - 1)) ** 2)[None, None, :],
+                                    shape).copy(),
+            lambda: jnp.broadcast_to(
+                ((jnp.arange(k, dtype=jnp.float32) / (k - 1)) ** 2
+                 )[None, None, :], shape))
+        a012 = init_unit("init_a012",
+                         lambda: np.ones((3,) + shape, np.float32),
+                         lambda: jnp.ones((3,) + shape, jnp.float32))
+        a3 = init_unit("init_a3",
+                       lambda: np.full(shape, 1.0 / 6.0, np.float32),
+                       lambda: jnp.full(shape, 1.0 / 6.0, jnp.float32))
+        b = init_unit("init_b",
+                      lambda: np.zeros((3,) + shape, np.float32),
+                      lambda: jnp.zeros((3,) + shape, jnp.float32))
+        c = init_unit("init_c",
+                      lambda: np.ones((3,) + shape, np.float32),
+                      lambda: jnp.ones((3,) + shape, jnp.float32))
+        bnd = init_unit("init_bnd",
+                        lambda: np.ones(shape, np.float32),
+                        lambda: jnp.ones(shape, jnp.float32))
+        wrk1 = init_unit("init_wrk1",
+                         lambda: np.zeros(shape, np.float32),
+                         lambda: jnp.zeros(shape, jnp.float32))
+        _ = init_unit("init_wrk2",
+                      lambda: np.zeros(shape, np.float32),
+                      lambda: jnp.zeros(shape, jnp.float32))
+
+        def place(x, dev: bool):
+            if dev and not isinstance(x, jax.Array):
+                return to_dev(x)
+            if not dev and isinstance(x, jax.Array):
+                return to_host(x)
+            return x
+
+        a_full_dev = jnp.concatenate([jnp.asarray(a012),
+                                      jnp.asarray(a3)[None]], 0)
+        a_full_np = np.concatenate([np.asarray(a012), np.asarray(a3)[None]], 0)
+
+        gosa = 0.0
+        for _ in range(self.iters):
+            if budget_s and time.perf_counter() - t0 > budget_s:
+                return Measurement(time_s=time.perf_counter() - t0,
+                                   energy_ws=0.0, timed_out=True,
+                                   avg_watts=self.power.p_cpu,
+                                   detail={"placement": dict(placement)})
+            # u8: stencil
+            dev = on_dev("jacobi_stencil")
+            p = place(p, dev)
+            args = [place(x, dev) for x in
+                    (a_full_dev if dev else a_full_np, b, c, bnd, wrk1)]
+            ss = timed(dev, _jx_stencil if dev else _np_stencil, p, *args)
+            # u9: gosa reduction
+            dev = on_dev("gosa_reduction")
+            ss_g = place(ss, dev)
+            gosa = timed(dev, _jx_gosa if dev else
+                         (lambda s: float(np.sum(np.square(s)))), ss_g)
+            # u10+u11: wrk2 write + p update (fused update, as in the python
+            # himeno where wrk2 is copied back into p's interior)
+            dev = on_dev("wrk2_write") or on_dev("p_update")
+            p, ss = place(p, dev), place(ss, dev)
+            if dev:
+                p = timed(True, _jx_wrk2, p, ss)
+            else:
+                p = timed(False, lambda pp, s: _np_update(pp, s), p, ss)
+
+        # u12: final residual
+        dev = on_dev("final_residual")
+        p = place(p, dev)
+        args = [place(x, dev) for x in
+                (a_full_dev if dev else a_full_np, b, c, bnd, wrk1)]
+        ss = timed(dev, _jx_stencil if dev else _np_stencil, p, *args)
+        final = timed(dev, _jx_gosa if dev else
+                      (lambda s: float(np.sum(np.square(s)))), ss)
+
+        t_total = time.perf_counter() - t0
+        energy = self.power.energy(t_total, t_device)
+        return Measurement(
+            time_s=t_total, energy_ws=energy,
+            avg_watts=self.power.average_watts(t_total, t_device),
+            detail={"gosa": float(gosa), "final_residual": float(final),
+                    "t_device": t_device, "placement": dict(placement)})
+
+    def verify_numerics(self) -> float:
+        """|gosa_all_cpu - gosa_all_device| — placement must not change math."""
+        cpu = self.run({u: 0 for u in UNIT_NAMES})
+        dev = self.run({u: 1 for u in UNIT_NAMES})
+        return abs(cpu.detail["gosa"] - dev.detail["gosa"])
+
+
+def _np_update(p, ss):
+    p = p.copy()
+    p[1:-1, 1:-1, 1:-1] += OMEGA * ss
+    return p

@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpointer import Checkpointer, tree_paths
+
+__all__ = ["Checkpointer", "tree_paths"]

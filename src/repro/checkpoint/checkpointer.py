@@ -1,0 +1,154 @@
+"""Async, atomic, sharding-aware checkpointing.
+
+Layout per step:
+    <dir>/step_<n>.tmp/...   (write)
+    <dir>/step_<n>/          (atomic rename on completion)
+        manifest.json        (step, leaf paths, shapes, dtypes, config hash)
+        arrays.npz           (flattened leaves by escaped path)
+
+Restore re-places every leaf with the *target* shardings, so a checkpoint
+written on one mesh restores onto a degraded/rescaled mesh (elastic restart —
+the Step-7 reconfiguration path). Saves run on a background thread;
+``wait()`` joins before the next save or program exit.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _escape(path: tuple) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def tree_paths(tree: Any) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(_escape(p), v) for p, v in flat]
+
+
+@dataclass
+class Checkpointer:
+    directory: str
+    keep_last: int = 3
+
+    def __post_init__(self):
+        os.makedirs(self.directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, *, blocking: bool = False,
+             extra: Optional[dict] = None) -> None:
+        self.wait()
+        # snapshot to host memory synchronously (cheap vs train step), then
+        # serialize on the background thread. bfloat16 (no native numpy
+        # support in npz) is stored as a uint16 view + manifest dtype tag.
+        leaves = []
+        for k, v in tree_paths(tree):
+            arr = np.asarray(v)
+            if arr.dtype.name == "bfloat16":
+                arr = arr.view(np.uint16)
+            leaves.append((k, arr))
+        true_dtypes = {k: str(np.asarray(v).dtype)
+                       for k, v in tree_paths(tree)}
+
+        def _write():
+            try:
+                tmp = os.path.join(self.directory, f"step_{step}.tmp")
+                final = os.path.join(self.directory, f"step_{step}")
+                os.makedirs(tmp, exist_ok=True)
+                arrays = {k: v for k, v in leaves}
+                np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+                manifest = {
+                    "step": step,
+                    "leaves": {k: {"shape": list(v.shape),
+                                   "dtype": true_dtypes[k]}
+                               for k, v in leaves},
+                    "extra": extra or {},
+                }
+                manifest["digest"] = _digest(manifest["leaves"])
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)  # atomic publish
+                self._gc()
+            except BaseException as e:  # surfaced on wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except ValueError:
+                    continue
+        return max(steps) if steps else None
+
+    def restore(self, step: int, template: Any,
+                shardings: Optional[Any] = None) -> Any:
+        """Restore into ``template``'s structure; re-shard onto ``shardings``
+        (tree of NamedSharding) when given — elastic mesh restore."""
+        self.wait()
+        path = os.path.join(self.directory, f"step_{step}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        if manifest.get("digest") != _digest(manifest["leaves"]):
+            raise IOError(f"corrupt checkpoint manifest at step {step}")
+        data = np.load(os.path.join(path, "arrays.npz"))
+        flat_t = jax.tree_util.tree_flatten_with_path(template)
+        keys = [_escape(p) for p, _ in flat_t[0]]
+        shard_leaves = (jax.tree.leaves(shardings)
+                        if shardings is not None else [None] * len(keys))
+        out = []
+        import ml_dtypes
+
+        for (key, tmpl), sh in zip(
+                [( _escape(p), v) for p, v in flat_t[0]], shard_leaves):
+            arr = data[key]
+            if manifest["leaves"][key]["dtype"] == "bfloat16":
+                arr = arr.view(ml_dtypes.bfloat16)
+            if tuple(arr.shape) != tuple(tmpl.shape):
+                raise ValueError(
+                    f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                    f"template {tmpl.shape}")
+            arr = arr.astype(tmpl.dtype)
+            out.append(jax.device_put(arr, sh) if sh is not None
+                       else jax.numpy.asarray(arr))
+        return jax.tree_util.tree_unflatten(flat_t[1], out)
+
+    def _gc(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[: -self.keep_last] if self.keep_last else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s}"),
+                          ignore_errors=True)
+
+
+def _digest(leaves_manifest: dict) -> str:
+    blob = json.dumps(leaves_manifest, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:16]

@@ -1,0 +1,23 @@
+from repro.configs.base import (
+    ArchConfig,
+    ShapeSpec,
+    SHAPES,
+    cell_supported,
+    get_config,
+    list_configs,
+    reduced,
+    register,
+    smoke_shape,
+)
+
+__all__ = [
+    "ArchConfig",
+    "ShapeSpec",
+    "SHAPES",
+    "cell_supported",
+    "get_config",
+    "list_configs",
+    "reduced",
+    "register",
+    "smoke_shape",
+]

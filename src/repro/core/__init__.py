@@ -1,0 +1,33 @@
+"""The paper's contribution: power-aware automatic offloading.
+
+GA search (ga, genome, fitness) + power/energy models (power) + static
+narrowing (arithmetic_intensity, candidates) + verification environments
+(verifier, lm_cost_model) + mixed-environment selection (device_select) +
+runtime reconfiguration (reconfigure).
+"""
+from repro.core.fitness import (
+    Measurement, TIMEOUT_SECONDS, UserRequirement, fitness,
+)
+from repro.core.ga import GAConfig, GAResult, run_ga
+from repro.core.genome import Gene, GenomeSpace, binary_space
+from repro.core.power import (
+    HardwareSpec, PaperPowerModel, RooflineTerms, TPU_V5E, TpuPowerModel,
+)
+from repro.core.lm_cost_model import Decisions, analyze_cell, measure_cell
+from repro.core.offload_search import (
+    lm_genome_space, search_himeno, search_lm_cell,
+)
+from repro.core.candidates import NarrowingConfig, narrow_and_measure
+from repro.core.device_select import Destination, select_destination
+
+__all__ = [
+    "Measurement", "TIMEOUT_SECONDS", "UserRequirement", "fitness",
+    "GAConfig", "GAResult", "run_ga",
+    "Gene", "GenomeSpace", "binary_space",
+    "HardwareSpec", "PaperPowerModel", "RooflineTerms", "TPU_V5E",
+    "TpuPowerModel",
+    "Decisions", "analyze_cell", "measure_cell",
+    "lm_genome_space", "search_himeno", "search_lm_cell",
+    "NarrowingConfig", "narrow_and_measure",
+    "Destination", "select_destination",
+]

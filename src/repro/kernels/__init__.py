@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel subpackage has the required triplet:
+    kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling
+    ops.py    — jit'd public wrapper (TPU compiled / CPU interpret / ref)
+    ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+The Himeno stencil is the paper's own §4 evaluation workload; flash
+attention / rmsnorm / wkv are the LM hot spots the offload genome's
+"attention impl" gene dispatches to on real TPU hardware.
+"""
+from repro.kernels.himeno.ops import himeno_run, himeno_step
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.rmsnorm.ops import rms_norm
+from repro.kernels.wkv.ops import wkv
+
+__all__ = ["himeno_run", "himeno_step", "flash_attention", "rms_norm", "wkv"]

@@ -1,0 +1,24 @@
+"""Jit'd wrapper — dispatches to the Pallas flash kernel on TPU, interpret
+mode for validation on CPU, or the jnp reference."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    impl: str = "auto", block_q: int = 128, block_k: int = 128):
+    if impl == "pallas" or (impl == "auto" and jax.default_backend() == "tpu"):
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      block_q=block_q, block_k=block_k)
+    if impl == "interpret":
+        return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                      block_q=block_q, block_k=block_k,
+                                      interpret=True)
+    return attention_ref(q, k, v, causal=causal, window=window)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: naive softmax attention (causal / sliding-window)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None):
+    """q,k,v: (B, H, S, D). Returns (B, H, S, D)."""
+    s = q.shape[2]
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        qi = jnp.arange(s)[:, None]
+        ki = jnp.arange(s)[None, :]
+        mask = ki <= qi
+        if window:
+            mask &= ki > qi - window
+        logits = jnp.where(mask, logits, NEG_INF)
+    probs = jnp.exp(logits - jnp.max(logits, -1, keepdims=True))
+    probs = probs / jnp.sum(probs, -1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v)

@@ -1,0 +1,45 @@
+"""Jit'd public wrapper for the Himeno Jacobi sweep.
+
+On a real TPU backend the Pallas kernel runs compiled; on this CPU container
+it runs in interpret mode (same kernel body, Python-evaluated) or falls back
+to the pure-jnp reference — selectable so the GA verification environment can
+measure a fast path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.himeno.kernel import himeno_jacobi_pallas
+from repro.kernels.himeno.ref import jacobi_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("omega", "impl"))
+def himeno_step(p, a, b, c, bnd, wrk1, *, omega: float = 0.8,
+                impl: str = "auto"):
+    """One Jacobi sweep: impl in {auto, pallas, interpret, ref}."""
+    if impl == "pallas" or (impl == "auto" and _on_tpu()):
+        return himeno_jacobi_pallas(p, a, b, c, bnd, wrk1, omega=omega)
+    if impl == "interpret":
+        return himeno_jacobi_pallas(p, a, b, c, bnd, wrk1, omega=omega,
+                                    interpret=True)
+    return jacobi_ref(p, a, b, c, bnd, wrk1, omega=omega)
+
+
+def himeno_run(state: dict, iters: int, *, omega: float = 0.8,
+               impl: str = "auto"):
+    """iters Jacobi sweeps via lax.scan; returns (final p, last gosa)."""
+
+    def body(p, _):
+        p2, gosa = himeno_step(p, state["a"], state["b"], state["c"],
+                               state["bnd"], state["wrk1"], omega=omega,
+                               impl=impl)
+        return p2, gosa
+
+    p, gosas = jax.lax.scan(body, state["p"], None, length=iters)
+    return p, gosas[-1]

@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the Himeno 19-point stencil Jacobi step.
+
+Faithful to the RIKEN Himeno benchmark (the paper's §4 evaluation target):
+incompressible-flow pressure Poisson solve, Jacobi iteration, full
+coefficient arrays a(4), b(3), c(3), bnd, wrk1. One call = one Jacobi sweep
+returning (p_new, gosa).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def himeno_init(shape: tuple[int, int, int], dtype=jnp.float32):
+    """Standard Himeno initialization: p = (k/(K-1))^2, unit coefficients."""
+    i, j, k = shape
+    kk = jnp.arange(k, dtype=dtype)
+    p = jnp.broadcast_to(((kk / (k - 1)) ** 2)[None, None, :], shape)
+    a = jnp.stack([jnp.ones(shape, dtype)] * 3 + [jnp.full(shape, 1.0 / 6.0, dtype)])
+    b = jnp.zeros((3,) + shape, dtype)
+    c = jnp.ones((3,) + shape, dtype)
+    bnd = jnp.ones(shape, dtype)
+    wrk1 = jnp.zeros(shape, dtype)
+    return dict(p=p, a=a, b=b, c=c, bnd=bnd, wrk1=wrk1)
+
+
+def jacobi_ref(p, a, b, c, bnd, wrk1, omega: float = 0.8):
+    """One Jacobi sweep. All arrays (I,J,K) except a:(4,I,J,K), b/c:(3,I,J,K).
+
+    Returns (p_new, gosa) with boundaries of p passed through unchanged."""
+    C = slice(1, -1)
+    P, N = slice(2, None), slice(0, -2)  # +1 / -1 shifts on interior
+
+    s0 = (
+        a[0][C, C, C] * p[P, C, C]
+        + a[1][C, C, C] * p[C, P, C]
+        + a[2][C, C, C] * p[C, C, P]
+        + b[0][C, C, C] * (p[P, P, C] - p[P, N, C] - p[N, P, C] + p[N, N, C])
+        + b[1][C, C, C] * (p[C, P, P] - p[C, N, P] - p[C, P, N] + p[C, N, N])
+        + b[2][C, C, C] * (p[P, C, P] - p[N, C, P] - p[P, C, N] + p[N, C, N])
+        + c[0][C, C, C] * p[N, C, C]
+        + c[1][C, C, C] * p[C, N, C]
+        + c[2][C, C, C] * p[C, C, N]
+        + wrk1[C, C, C]
+    )
+    ss = (s0 * a[3][C, C, C] - p[C, C, C]) * bnd[C, C, C]
+    gosa = jnp.sum(jnp.square(ss.astype(jnp.float32)))
+    p_new = p.at[C, C, C].add((omega * ss).astype(p.dtype))
+    return p_new, gosa
+
+
+FLOPS_PER_POINT = 34  # the benchmark's own accounting

@@ -1,0 +1,18 @@
+"""Jit'd RMSNorm wrapper (pallas on TPU / interpret / jnp reference)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm.kernel import rms_norm_pallas
+from repro.kernels.rmsnorm.ref import rms_norm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "impl"))
+def rms_norm(x, scale, *, eps: float = 1e-5, impl: str = "auto"):
+    if impl == "pallas" or (impl == "auto" and jax.default_backend() == "tpu"):
+        return rms_norm_pallas(x, scale, eps=eps)
+    if impl == "interpret":
+        return rms_norm_pallas(x, scale, eps=eps, interpret=True)
+    return rms_norm_ref(x, scale, eps=eps)

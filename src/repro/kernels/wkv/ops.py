@@ -1,0 +1,18 @@
+"""Jit'd WKV wrapper (pallas on TPU / interpret / sequential reference)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.wkv.kernel import wkv_pallas
+from repro.kernels.wkv.ref import wkv_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "impl"))
+def wkv(r, k, v, lw, u, *, chunk: int = 64, impl: str = "auto"):
+    if impl == "pallas" or (impl == "auto" and jax.default_backend() == "tpu"):
+        return wkv_pallas(r, k, v, lw, u, chunk=chunk)
+    if impl == "interpret":
+        return wkv_pallas(r, k, v, lw, u, chunk=chunk, interpret=True)
+    return wkv_ref(r, k, v, lw, u)

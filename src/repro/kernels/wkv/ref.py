@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the RWKV6 WKV recurrence — naive sequential scan.
+
+    out_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T        (w_t = exp(lw_t), decay on k-dim)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_ref(r, k, v, lw, u, state=None):
+    """r,k,v,lw: (B, H, S, D) float32; u: (H, D). Returns (out, final_state)."""
+    b, h, s, d = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, d, d), jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, lw_t = inp  # (B,H,D)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,D,Dv)
+        out_t = jnp.einsum("bhd,bhdv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S = jnp.exp(lw_t)[..., None] * S + kv
+        return S, out_t
+
+    xs = tuple(x.transpose(2, 0, 1, 3) for x in (r, k, v, lw))
+    S, out = jax.lax.scan(step, state, xs)
+    return out.transpose(1, 2, 0, 3), S

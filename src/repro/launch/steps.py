@@ -1,0 +1,316 @@
+"""Step builders: jit-ready (fn, in_shardings, out_shardings, input specs)
+for every cell kind — the single construction path shared by the trainer,
+the server, and the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.core.lm_cost_model import Decisions
+from repro.models import inputs as I
+from repro.models import transformer as T
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+from repro.optim.adafactor import (
+    AdafactorConfig, adafactor_update, init_factored_state,
+)
+from repro.optim.grad_compression import compress_with_feedback
+from repro.parallel.sharding import (
+    ShardingRules, named_sharding, shardings_from_defs, use_mesh,
+)
+
+
+@dataclass
+class CellProgram:
+    fn: Callable
+    args: tuple  # ShapeDtypeStructs (positional)
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+    description: str = ""
+
+    def jitted(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jitted().lower(*self.args)
+
+
+def apply_decisions(cfg: ArchConfig, dec: Optional[Decisions]) -> ArchConfig:
+    if dec is None:
+        return cfg
+    changes: dict[str, Any] = {"remat": dec.remat}
+    if dec.accum:
+        changes["accum"] = dec.accum
+    return dataclasses.replace(cfg, **changes)
+
+
+def _tree_shapes(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _param_shardings(cfg: ArchConfig, rules: ShardingRules, mesh):
+    return shardings_from_defs(T.model_defs(cfg), rules, mesh)
+
+
+def _batch_shardings(cfg, shape, rules, mesh, specs):
+    axes = I.batch_logical_axes(cfg, shape)
+    return {k: named_sharding(mesh, rules, axes[k], specs[k].shape)
+            for k in specs}
+
+
+def _replicated(mesh):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    mesh,
+    rules: ShardingRules,
+    dec: Optional[Decisions] = None,
+    opt_cfg: AdamWConfig = AdamWConfig(),
+    mode: str = "exec",
+    compress_grads: bool = False,
+) -> CellProgram:
+    cfg = apply_decisions(cfg, dec)
+    accum = max(cfg.accum, 1)
+    assert shape.global_batch % accum == 0, (shape.global_batch, accum)
+    acc_dtype = jnp.dtype(cfg.accum_dtype)
+
+    def loss_fn(params, mb):
+        loss, metrics = T.forward_loss(cfg, params, mb, mode=mode)
+        return loss, metrics
+
+    # Grad sharding constraint: without it GSPMD accumulates the stacked
+    # per-layer grads data-UNsharded through the backward scan (a full-D
+    # 12 GiB buffer for grok) and only reduce-scatters at the end.
+    p_shard = _param_shardings(cfg, rules, mesh)
+
+    def _constrain_grads(grads):
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s), grads, p_shard)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            grads = _constrain_grads(grads)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+
+            # Differentiate THROUGH the microbatch scan: the scan transpose
+            # accumulates d_params in a single carry, instead of a separate
+            # per-microbatch grad tree + explicit accumulator (which costs
+            # several full grad-tree copies via while double-buffering).
+            def total_loss(params, mbs):
+                cp = _constrain_grads(params)
+
+                def body(acc, mb):
+                    l, _ = jax.remat(loss_fn)(cp, mb)
+                    return acc + l, None
+
+                s, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), mbs)
+                return s / accum
+
+            loss, grads = jax.value_and_grad(total_loss)(params, mbs)
+            grads = _constrain_grads(grads)
+            metrics = {"ce_loss": loss, "moe_aux": jnp.zeros((), jnp.float32)}
+
+        if compress_grads:
+            grads, new_resid = compress_with_feedback(grads, state["ef"])
+        if cfg.optimizer == "adafactor":
+            new_params, new_opt, opt_metrics = adafactor_update(
+                params, grads, state["opt"],
+                AdafactorConfig(lr=opt_cfg.lr, weight_decay=opt_cfg.weight_decay))
+        else:
+            new_params, new_opt, opt_metrics = adamw_update(
+                params, grads, state["opt"], opt_cfg)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        if compress_grads:
+            new_state["ef"] = new_resid
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_state, metrics
+
+    # shapes & shardings (no allocation: eval_shape end-to-end)
+    key = jax.random.PRNGKey(0)
+    param_shapes = jax.eval_shape(functools.partial(T.init_params, cfg), key)
+    opt_init = (init_factored_state if cfg.optimizer == "adafactor"
+                else init_opt_state)
+    opt_shapes = jax.eval_shape(opt_init, param_shapes)
+    state_shapes = {"params": param_shapes, "opt": opt_shapes,
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    if compress_grads:
+        state_shapes["ef"] = jax.eval_shape(
+            lambda p: jax.tree.map(
+                lambda x: jnp.zeros(x.shape, jnp.float32), p), param_shapes)
+
+    rep = _replicated(mesh)
+    if cfg.optimizer == "adafactor":
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        def _full_spec(pshape, ns):
+            return tuple(ns.spec) + (None,) * (len(pshape.shape)
+                                               - len(ns.spec))
+
+        def vr_sh(pshape, ns):
+            spec = _full_spec(pshape, ns)
+            return NamedSharding(
+                mesh, P(*(spec[:-1] if len(spec) >= 2 else spec)))
+
+        def vc_sh(pshape, ns):
+            spec = _full_spec(pshape, ns)
+            if len(spec) >= 2:
+                return NamedSharding(mesh, P(*(spec[:-2] + (spec[-1],))))
+            return NamedSharding(mesh, P(None))  # (0,) placeholder
+
+        opt_shardings = {
+            "m": p_shard,
+            "vr": jax.tree.map(vr_sh, param_shapes, p_shard),
+            "vc": jax.tree.map(vc_sh, param_shapes, p_shard),
+            "count": rep,
+        }
+    else:
+        opt_shardings = {"m": p_shard, "v": p_shard, "count": rep}
+    state_shardings = {
+        "params": p_shard,
+        "opt": opt_shardings,
+        "step": rep,
+    }
+    if compress_grads:
+        state_shardings["ef"] = p_shard
+    batch_specs = I.input_specs(cfg, shape)
+    b_shard = _batch_shardings(cfg, shape, rules, mesh, batch_specs)
+
+    return CellProgram(
+        fn=train_step,
+        args=(state_shapes, batch_specs),
+        in_shardings=(state_shardings, b_shard),
+        out_shardings=(state_shardings, None),
+        donate_argnums=(0,),
+        description=f"train_step {cfg.name} {shape.name} accum={accum} "
+                    f"remat={cfg.remat}",
+    )
+
+
+def init_train_state(cfg: ArchConfig, key, mesh=None, rules=None,
+                     compress_grads: bool = False):
+    params = T.init_params(cfg, key)
+    state = {"params": params, "opt": init_opt_state(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if compress_grads:
+        from repro.optim.grad_compression import init_error_feedback
+        state["ef"] = init_error_feedback(params)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Prefill (inference forward)
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    mesh,
+    rules: ShardingRules,
+    dec: Optional[Decisions] = None,
+    mode: str = "exec",
+) -> CellProgram:
+    cfg = apply_decisions(cfg, dec)
+
+    def prefill_step(params, batch):
+        logits, _ = T.forward(cfg, params, batch, mode=mode, remat="none")
+        return logits
+
+    key = jax.random.PRNGKey(0)
+    param_shapes = jax.eval_shape(functools.partial(T.init_params, cfg), key)
+    p_shard = _param_shardings(cfg, rules, mesh)
+    batch_specs = I.input_specs(cfg, shape)
+    b_shard = _batch_shardings(cfg, shape, rules, mesh, batch_specs)
+    return CellProgram(
+        fn=prefill_step,
+        args=(param_shapes, batch_specs),
+        in_shardings=(p_shard, b_shard),
+        out_shardings=None,
+        description=f"prefill_step {cfg.name} {shape.name}",
+    )
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step: one token against a seq_len cache)
+# ---------------------------------------------------------------------------
+
+
+def _state_shardings(cfg, state_shapes, rules, mesh):
+    axes = T.decode_state_logical_axes(cfg, state_shapes)
+
+    def one(ax, shp):
+        return named_sharding(mesh, rules, ax, shp.shape)
+
+    return jax.tree.map(
+        lambda ax, s: one(tuple(ax) if isinstance(ax, (list, tuple)) else ax, s),
+        axes, state_shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x))
+
+
+def build_serve_step(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    mesh,
+    rules: ShardingRules,
+    dec: Optional[Decisions] = None,
+) -> CellProgram:
+    def serve_step(params, state, tokens):
+        return T.decode_step(cfg, params, state, tokens)
+
+    key = jax.random.PRNGKey(0)
+    param_shapes = jax.eval_shape(functools.partial(T.init_params, cfg), key)
+    state_shapes = jax.eval_shape(
+        functools.partial(T.init_decode_state, cfg, shape.global_batch,
+                          shape.seq_len))
+    p_shard = _param_shardings(cfg, rules, mesh)
+    s_shard = _state_shardings(cfg, state_shapes, rules, mesh)
+    tok_spec = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    tok_shard = named_sharding(mesh, rules, ("batch",), tok_spec.shape)
+    logits_shard = named_sharding(
+        mesh, rules, ("batch", "act_vocab"),
+        (shape.global_batch, cfg.padded_vocab()))
+    return CellProgram(
+        fn=serve_step,
+        args=(param_shapes, state_shapes, tok_spec),
+        in_shardings=(p_shard, s_shard, tok_shard),
+        out_shardings=(logits_shard, s_shard),
+        donate_argnums=(1,),
+        description=f"serve_step {cfg.name} {shape.name} "
+                    f"cache={shape.seq_len}",
+    )
+
+
+def build_cell_program(cfg, shape, mesh, rules, dec=None, mode="exec"
+                       ) -> CellProgram:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh, rules, dec, mode=mode)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh, rules, dec, mode=mode)
+    return build_serve_step(cfg, shape, mesh, rules, dec)

@@ -1,0 +1,25 @@
+from repro.models.transformer import (
+    decode_step,
+    decode_state_logical_axes,
+    forward,
+    forward_loss,
+    init_decode_state,
+    init_params,
+    model_defs,
+    param_specs,
+)
+from repro.models.inputs import batch_logical_axes, input_specs, synthetic_batch
+
+__all__ = [
+    "decode_step",
+    "decode_state_logical_axes",
+    "forward",
+    "forward_loss",
+    "init_decode_state",
+    "init_params",
+    "model_defs",
+    "param_specs",
+    "batch_logical_axes",
+    "input_specs",
+    "synthetic_batch",
+]

@@ -1,0 +1,74 @@
+"""ShapeDtypeStruct input stand-ins + concrete synthetic batches per cell.
+
+``input_specs`` mirrors the shannon/kernels pattern: weak-type-correct,
+shardable, zero device allocation — these feed ``jit(...).lower()`` directly.
+``synthetic_batch`` materializes the same structure for CPU smoke tests.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+
+def batch_structure(cfg: ArchConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """(shape, dtype) description of the model-input batch for a cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": ((b,), jnp.int32)}
+
+    out: dict[str, Any] = {}
+    if cfg.frontend == "vision":
+        p = min(cfg.frontend_tokens, s // 2)
+        out["patches"] = ((b, p, cfg.d_model), jnp.bfloat16)
+        out["tokens"] = ((b, s - p), jnp.int32)
+    elif cfg.frontend == "audio":
+        out["frames"] = ((b, s, cfg.d_model), jnp.bfloat16)
+        out["tokens"] = ((b, s), jnp.int32)
+    else:
+        out["tokens"] = ((b, s), jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = ((b, s), jnp.int32)
+        out["loss_mask"] = ((b, s), jnp.float32)
+    return out
+
+
+def batch_logical_axes(cfg: ArchConfig, shape: ShapeSpec) -> dict[str, tuple]:
+    axes: dict[str, tuple] = {}
+    for name, (shp, _) in batch_structure(cfg, shape).items():
+        if len(shp) == 1:
+            axes[name] = ("batch",)
+        elif len(shp) == 2:
+            axes[name] = ("batch", "seq")
+        else:
+            axes[name] = ("batch", "seq", "embed")
+    return axes
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict[str, jax.ShapeDtypeStruct]:
+    return {
+        name: jax.ShapeDtypeStruct(shp, dt)
+        for name, (shp, dt) in batch_structure(cfg, shape).items()
+    }
+
+
+def synthetic_batch(cfg: ArchConfig, shape: ShapeSpec, seed: int = 0) -> dict:
+    """Concrete deterministic batch matching input_specs (CPU-sized cells)."""
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for name, (shp, dt) in batch_structure(cfg, shape).items():
+        key, sub = jax.random.split(key)
+        if dt == jnp.int32:
+            out[name] = jax.random.randint(sub, shp, 0, cfg.vocab_size, jnp.int32)
+        elif name == "loss_mask":
+            out[name] = jnp.ones(shp, jnp.float32)
+        else:
+            out[name] = jax.random.normal(sub, shp, jnp.float32).astype(dt)
+    if "loss_mask" in out and cfg.frontend == "vision":
+        p = batch_structure(cfg, shape)["patches"][0][1]
+        mask = out["loss_mask"].at[:, :p].set(0.0)
+        out["loss_mask"] = mask
+    return out

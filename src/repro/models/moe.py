@@ -1,0 +1,97 @@
+"""Mixture-of-Experts: top-k router + capacity-based dispatch.
+
+Dispatch is *row-local* (per batch row): each sequence dispatches its own
+tokens into (E, C) expert slots via an argsort over that row only, so the
+token axis stays batch-sharded — no global resort across data shards.
+
+Expert weights use expert-TP: every expert's FFN dim is sharded over the
+"model" axis and stored FSDP over "data" (with 8 experts on a 16-wide mesh
+axis, expert-dim sharding is impossible; see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.sharding import PDef, shard_act
+
+
+def moe_defs(cfg: ArchConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": PDef((d, e), ("fsdp", "act_experts"), dtype=jnp.float32),
+        "w_gate": PDef((e, d, f), ("experts", "fsdp", "expert_ffn")),
+        "w_up": PDef((e, d, f), ("experts", "fsdp", "expert_ffn")),
+        "w_down": PDef((e, f, d), ("experts", "expert_ffn", "fsdp")),
+    }
+
+
+def capacity(cfg: ArchConfig, tokens_per_row: int) -> int:
+    c = int(cfg.experts_per_token * tokens_per_row * cfg.capacity_factor
+            / cfg.num_experts)
+    return max(c, cfg.experts_per_token)
+
+
+def route(cfg: ArchConfig, p: dict, x: jax.Array):
+    """x: (B, S, D) -> (weights (B,S,k), expert_ids (B,S,k), aux_loss)."""
+    logits = (x.astype(jnp.float32) @ p["router"])  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, cfg.experts_per_token)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss
+    e = cfg.num_experts
+    density = jnp.mean(jax.nn.one_hot(ids[..., 0], e), axis=(0, 1))
+    density_proxy = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(density * density_proxy)
+    return weights.astype(x.dtype), ids, aux
+
+
+def moe_apply(cfg: ArchConfig, p: dict, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,D), aux_loss)."""
+    b, s, d = x.shape
+    k, e = cfg.experts_per_token, cfg.num_experts
+    cap = capacity(cfg, s)
+
+    weights, ids, aux = route(cfg, p, x)
+
+    # ---- row-local dispatch index build ------------------------------------
+    flat_ids = ids.reshape(b, s * k)  # (B, N) expert id per (token, choice)
+    flat_w = weights.reshape(b, s * k)
+    # slot of each (token,choice) within its expert = #earlier entries w/ same id
+    oh = jax.nn.one_hot(flat_ids, e, dtype=jnp.int32)  # (B, N, E)
+    csum = jnp.cumsum(oh, axis=1)  # inclusive prefix count per expert
+    slot = jnp.take_along_axis(csum, flat_ids[..., None], axis=-1)[..., 0] - 1
+    keep = slot < cap
+
+    # destination in flattened (E*C) space; dropped tokens go to a trash slot
+    dest = jnp.where(keep, flat_ids * cap + slot, e * cap)
+    token_idx = jnp.arange(s * k)[None, :] // k  # source token per choice
+
+    # gather source tokens into (E*C) slots
+    src_for_slot = jnp.full((b, e * cap + 1), s, jnp.int32)  # s = pad token
+    src_for_slot = src_for_slot.at[jnp.arange(b)[:, None], dest].set(
+        jnp.where(keep, token_idx, s))
+    src_for_slot = src_for_slot[:, :-1]  # drop trash slot
+    x_pad = jnp.concatenate([x, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+    dispatched = jnp.take_along_axis(
+        x_pad, src_for_slot[..., None], axis=1)  # (B, E*C, D)
+    dispatched = dispatched.reshape(b, e, cap, d)
+    dispatched = shard_act(dispatched, ("batch", "act_experts", "expert_cap", "embed"))
+
+    # ---- expert FFN (expert-TP over "expert_ffn") ---------------------------
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", dispatched, p["w_gate"]))
+    h = h * jnp.einsum("becd,edf->becf", dispatched, p["w_up"])
+    h = shard_act(h, ("batch", "act_experts", "expert_cap", "act_ffn"))
+    out_slots = jnp.einsum("becf,efd->becd", h, p["w_down"])  # (B,E,C,D)
+    out_slots = out_slots.reshape(b, e * cap, d)
+
+    # ---- combine: weighted scatter-add back to tokens -----------------------
+    flat_dest = jnp.where(keep, dest, e * cap)  # (B, N)
+    slot_out = jnp.concatenate(
+        [out_slots, jnp.zeros((b, 1, d), out_slots.dtype)], axis=1)
+    per_choice = jnp.take_along_axis(
+        slot_out, flat_dest[..., None], axis=1)  # (B, N, D)
+    per_choice = per_choice * flat_w[..., None].astype(per_choice.dtype)
+    combined = per_choice.reshape(b, s, k, d).sum(axis=2)
+    return shard_act(combined, ("batch", "seq", "embed")), aux

@@ -1,0 +1,187 @@
+"""RWKV6 ("Finch") block — linear attention with data-dependent decay.
+
+Recurrence per head (k-dim decay, hd = rwkv_head_size):
+    out_t = r_t · (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T ,  w_t = exp(-exp(w0 + lora(x_t)))
+
+Training/prefill uses the chunked parallel form (intra-chunk matrices on the
+MXU, inter-chunk state via lax.scan). Decode carries (S, last_x) — O(1).
+The data-dependent decay lora is the Finch hallmark and is kept; the
+data-dependent token-shift lora is simplified to learned-mu interpolation
+(documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.sharding import PDef, shard_act
+
+
+def rwkv_defs(cfg: ArchConfig) -> dict:
+    d, r = cfg.d_model, cfg.rwkv_decay_rank
+    f = cfg.d_ff
+    h = cfg.rwkv_heads
+    return {
+        # time mix
+        "mu": PDef((5, d), (None, "unsharded"), init="zeros"),  # r,k,v,g,w shifts
+        "w_r": PDef((d, d), ("fsdp", "rwkv_heads")),
+        "w_k": PDef((d, d), ("fsdp", "rwkv_heads")),
+        "w_v": PDef((d, d), ("fsdp", "rwkv_heads")),
+        "w_g": PDef((d, d), ("fsdp", "rwkv_heads")),
+        "w_o": PDef((d, d), ("rwkv_heads", "fsdp")),
+        "decay_base": PDef((d,), ("unsharded",), init="zeros", dtype=jnp.float32),
+        "decay_A": PDef((d, r), ("fsdp", None)),
+        "decay_B": PDef((r, d), (None, "fsdp")),
+        "bonus_u": PDef((h, cfg.rwkv_head_size), ("rwkv_heads", None),
+                        init="zeros", dtype=jnp.float32),
+        "ln_wkv": PDef((h, cfg.rwkv_head_size), ("rwkv_heads", None), init="ones",
+                       dtype=jnp.float32),
+        # channel mix
+        "mu_c": PDef((2, d), (None, "unsharded"), init="zeros"),  # k,r shifts
+        "c_k": PDef((d, f), ("fsdp", "ffn")),
+        "c_v": PDef((f, d), ("ffn", "fsdp")),
+        "c_r": PDef((d, d), ("fsdp", "unsharded")),
+    }
+
+
+def _token_shift(x: jax.Array, last_x: jax.Array | None = None) -> jax.Array:
+    """x_{t-1} along seq; first position uses last_x (or zeros)."""
+    first = jnp.zeros_like(x[:, :1]) if last_x is None else last_x[:, None]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _mix(x, xx, mu):
+    return x + (xx - x) * mu.astype(x.dtype)
+
+
+def _decays(cfg: ArchConfig, p: dict, xw: jax.Array) -> jax.Array:
+    """log decays (negative), per channel. xw: (B,S,D) -> (B,S,D) float32."""
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["decay_A"].astype(jnp.float32))
+    lora = lora @ p["decay_B"].astype(jnp.float32)
+    return -jnp.exp(p["decay_base"] + lora)  # log w
+
+
+def _wkv_chunk(r_c, k_c, v_c, lw_c, u, state):
+    """One chunk of the WKV recurrence.
+    r,k,v: (B,H,c,hd)  lw: (B,H,c,hd) log decay  u: (H,hd)  state: (B,H,hd,hd)
+    Returns (out (B,H,c,hd_v), new_state)."""
+    cum = jnp.cumsum(lw_c, axis=2)  # inclusive (B,H,c,hd)
+    # intra-chunk: A[t,i] = (r_t * exp(cum_t - lw_t - cum_i)) . k_i  for i < t
+    q_dec = jnp.exp(cum - lw_c)  # decay from chunk start to t-1
+    k_dec = jnp.exp(-cum)  # un-decay keys to chunk start
+    A = jnp.einsum("bhtd,bhid->bhti", r_c * q_dec, k_c * k_dec)
+    c = r_c.shape[2]
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)  # strictly lower
+    A = jnp.where(tri[None, None], A, 0.0)
+    # diagonal bonus term
+    diag = jnp.einsum("bhtd,bhtd->bht", r_c * u[None, :, None, :], k_c)
+    out = jnp.einsum("bhti,bhiv->bhtv", A, v_c) + diag[..., None] * v_c
+    # inter-chunk: out += (r_t * exp(cum_t - lw_t)) . S_prev
+    out = out + jnp.einsum("bhtd,bhdv->bhtv", r_c * q_dec, state)
+    # state update: S = exp(cum_c) * S + sum_i exp(cum_c - cum_i) k_i v_i^T
+    total = cum[:, :, -1]  # (B,H,hd)
+    carry_k = k_c * jnp.exp(total[:, :, None, :] - cum)
+    new_state = (state * jnp.exp(total)[..., None]
+                 + jnp.einsum("bhid,bhiv->bhdv", carry_k, v_c))
+    return out, new_state
+
+
+def rwkv_time_mix(cfg: ArchConfig, p: dict, x: jax.Array, *, mode: str = "exec",
+                  state: jax.Array | None = None, last_x: jax.Array | None = None):
+    """x: (B,S,D) -> (B,S,D). If state is given, also returns (state, last_x)."""
+    b, s, d = x.shape
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_size
+    xx = _token_shift(x, last_x)
+    xr = _mix(x, xx, p["mu"][0])
+    xk = _mix(x, xx, p["mu"][1])
+    xv = _mix(x, xx, p["mu"][2])
+    xg = _mix(x, xx, p["mu"][3])
+    xw = _mix(x, xx, p["mu"][4])
+
+    def heads(v):
+        return v.reshape(b, s, h, hd).transpose(0, 2, 1, 3).astype(jnp.float32)
+
+    r = heads(xr @ p["w_r"])
+    k = heads(xk @ p["w_k"])
+    v = heads(xv @ p["w_v"])
+    g = xg @ p["w_g"]
+    lw = heads(_decays(cfg, p, xw))
+    u = p["bonus_u"]
+
+    cs = min(cfg.ssm_chunk, s)
+    if s % cs:
+        cs = s
+    nc = s // cs
+    state0 = jnp.zeros((b, h, hd, hd), jnp.float32) if state is None else state
+
+    def split(vv):
+        return vv.reshape(b, h, nc, cs, hd)
+
+    rc, kc, vc, lwc = split(r), split(k), split(v), split(lw)
+    if mode == "probe" or nc == 1:
+        st = state0
+        outs = []
+        for i in range(nc):
+            o, st = _wkv_chunk(rc[:, :, i], kc[:, :, i], vc[:, :, i],
+                               lwc[:, :, i], u, st)
+            outs.append(o)
+        out = jnp.stack(outs, axis=2)
+    else:
+        def body(st, inp):
+            o, st = _wkv_chunk(*inp, u, st)
+            return st, o
+
+        st, out = jax.lax.scan(
+            body, state0,
+            (rc.transpose(2, 0, 1, 3, 4), kc.transpose(2, 0, 1, 3, 4),
+             vc.transpose(2, 0, 1, 3, 4), lwc.transpose(2, 0, 1, 3, 4)))
+        out = out.transpose(1, 2, 0, 3, 4)
+
+    out = out.reshape(b, h, s, hd)
+    # per-head rms norm (GroupNorm stand-in), then gate
+    var = jnp.mean(jnp.square(out), axis=-1, keepdims=True)
+    out = out * jax.lax.rsqrt(var + cfg.norm_eps) * p["ln_wkv"][None, :, None, :]
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, d)
+    out = (out.astype(x.dtype) * jax.nn.silu(g))
+    out = shard_act(out, ("batch", "seq_inner", "act_heads"))
+    y = out @ p["w_o"]
+    if state is not None or last_x is not None:
+        return y, st, x[:, -1]
+    return y
+
+
+def rwkv_channel_mix(cfg: ArchConfig, p: dict, x: jax.Array,
+                     last_x: jax.Array | None = None):
+    xx = _token_shift(x, last_x)
+    xk = _mix(x, xx, p["mu_c"][0])
+    xr = _mix(x, xx, p["mu_c"][1])
+    k = jnp.square(jax.nn.relu(xk @ p["c_k"]))
+    k = shard_act(k, ("batch", "seq_inner", "act_ffn"))
+    out = jax.nn.sigmoid(xr @ p["c_r"]) * (k @ p["c_v"])
+    if last_x is not None:
+        return out, x[:, -1]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode state
+# ---------------------------------------------------------------------------
+
+def init_rwkv_state(cfg: ArchConfig, batch: int) -> dict:
+    h, hd = cfg.rwkv_heads, cfg.rwkv_head_size
+    return {
+        "wkv": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "tm_x": jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+        "cm_x": jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+    }
+
+
+def rwkv_decode_step(cfg: ArchConfig, p: dict, x: jax.Array, state: dict):
+    """x: (B,1,D). Returns (y_time_mix_out_for_residual handled by caller)."""
+    y_t, wkv, tm_x = rwkv_time_mix(
+        cfg, p, x, mode="probe", state=state["wkv"],
+        last_x=state["tm_x"].astype(x.dtype))
+    return y_t, {"wkv": wkv, "tm_x": tm_x.astype(jnp.bfloat16),
+                 "cm_x": state["cm_x"]}

@@ -1,0 +1,193 @@
+"""Mamba2 (SSD) block — chunked state-space scan.
+
+Training/prefill uses the state-space-duality chunked form: quadratic
+attention-like math *within* a chunk (MXU-friendly) and a lax.scan carrying
+the (heads, head_dim, state) recurrence *across* chunks. Decode is a single
+O(1) state update.
+
+mode="probe" unrolls the chunk loop (exact HLO FLOP accounting for the
+roofline); mode="exec" uses lax.scan (small HLO for the production artifact).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.sharding import PDef, shard_act
+
+
+def mamba_defs(cfg: ArchConfig) -> dict:
+    d, di, ns, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * ns
+    return {
+        "in_proj": PDef((d, 2 * di + 2 * ns + nh), ("fsdp", "ssm_inner")),
+        "conv_w": PDef((cfg.conv_kernel, conv_ch), (None, "ssm_inner")),
+        "conv_b": PDef((conv_ch,), ("ssm_inner",), init="zeros"),
+        "A_log": PDef((nh,), ("ssm_heads",), init="zeros"),
+        "D": PDef((nh,), ("ssm_heads",), init="ones"),
+        "dt_bias": PDef((nh,), ("ssm_heads",), init="zeros"),
+        "norm_scale": PDef((di,), ("ssm_inner",), init="ones", dtype=jnp.float32),
+        "out_proj": PDef((di, d), ("ssm_inner", "fsdp")),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: jax.Array):
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xs = zxbcdt[..., di:2 * di]
+    Bm = zxbcdt[..., 2 * di:2 * di + ns]
+    Cm = zxbcdt[..., 2 * di + ns:2 * di + 2 * ns]
+    dt = zxbcdt[..., 2 * di + 2 * ns:]
+    return z, xs, Bm, Cm, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C). state: (B,K-1,C) or None.
+
+    Returns (y, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(y), new_state
+
+
+def _gated_norm(x: jax.Array, z: jax.Array, scale: jax.Array, eps: float):
+    x = x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def mamba_apply(cfg: ArchConfig, p: dict, x: jax.Array, *, mode: str = "exec"
+                ) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D). Chunked SSD scan."""
+    b, s, _ = x.shape
+    nh, hd, ns = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    cs = min(cfg.ssm_chunk, s)
+    if s % cs:
+        cs = s
+    nc = s // cs
+
+    zxbcdt = x @ p["in_proj"]
+    z, xs, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    xbc, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = (xbc[..., :cfg.d_inner],
+                  xbc[..., cfg.d_inner:cfg.d_inner + ns],
+                  xbc[..., cfg.d_inner + ns:])
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,)
+    xh = xs.reshape(b, s, nh, hd)
+    xh = shard_act(xh, ("batch", "seq_inner", "ssm_heads", None))
+
+    # decay per step: a = exp(dt * A)  in log space
+    log_a = dt * A  # (B,S,H)  (negative)
+
+    def chunk_math(x_c, B_c, C_c, dt_c, log_a_c, state):
+        """One chunk. x_c:(B,cs,H,hd) B_c/C_c:(B,cs,ns) dt_c/log_a_c:(B,cs,H)
+        state:(B,H,hd,ns) -> (y_c, new_state)"""
+        cum = jnp.cumsum(log_a_c, axis=1)  # (B,cs,H)
+        # intra-chunk: L[i,j] = exp(cum_i - cum_j) for j<=i (segment decay)
+        li = cum[:, :, None, :] - cum[:, None, :, :]  # (B,cs,cs,H)
+        tri = jnp.tril(jnp.ones((cs, cs), bool))
+        Lm = jnp.where(tri[None, :, :, None], jnp.exp(li), 0.0)  # (B,i,j,H)
+        # scores: (C_i . B_j) * L * dt_j
+        cb = jnp.einsum("bin,bjn->bij", C_c.astype(jnp.float32),
+                        B_c.astype(jnp.float32))  # (B,cs,cs)
+        w = cb[..., None] * Lm * dt_c[:, None, :, :]  # (B,i,j,H)
+        y_intra = jnp.einsum("bijh,bjhd->bihd", w, xh_f(x_c))
+        # contribution from carried state: y += C_i . (decay_i * state)
+        decay_in = jnp.exp(cum)  # (B,cs,H)
+        y_state = jnp.einsum("bin,bhdn->bihd", C_c.astype(jnp.float32), state)
+        y_c = y_intra + y_state * decay_in[..., None]
+        # new state: decay old + sum_j decay_{cs-1..j} dt_j B_j x_j
+        tail = jnp.exp(cum[:, -1:, :] - cum)  # (B,cs,H) decay from j to end
+        contrib = jnp.einsum("bjh,bjn,bjhd->bhdn",
+                             (tail * dt_c), B_c.astype(jnp.float32), xh_f(x_c))
+        new_state = state * jnp.exp(cum[:, -1])[:, :, None, None] + contrib
+        return y_c, new_state
+
+    def xh_f(v):
+        return v.astype(jnp.float32)
+
+    state0 = jnp.zeros((b, nh, hd, ns), jnp.float32)
+    xc = xh.reshape(b, nc, cs, nh, hd)
+    Bc = Bm.reshape(b, nc, cs, ns)
+    Cc = Cm.reshape(b, nc, cs, ns)
+    dtc = dt.reshape(b, nc, cs, nh)
+    lac = log_a.reshape(b, nc, cs, nh)
+
+    if mode == "probe":
+        state = state0
+        ys = []
+        for i in range(nc):
+            y_c, state = chunk_math(xc[:, i], Bc[:, i], Cc[:, i],
+                                    dtc[:, i], lac[:, i], state)
+            ys.append(y_c)
+        y = jnp.stack(ys, axis=1)
+    else:
+        def body(state, inp):
+            x_c, B_c, C_c, dt_c, la_c = inp
+            y_c, state = chunk_math(x_c, B_c, C_c, dt_c, la_c, state)
+            return state, y_c
+
+        _, y = jax.lax.scan(
+            body, state0,
+            (xc.transpose(1, 0, 2, 3, 4), Bc.transpose(1, 0, 2, 3),
+             Cc.transpose(1, 0, 2, 3), dtc.transpose(1, 0, 2, 3),
+             lac.transpose(1, 0, 2, 3)))
+        y = y.transpose(1, 0, 2, 3, 4)
+
+    y = y.reshape(b, s, nh, hd)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh_f(xh)
+    y = y.reshape(b, s, cfg.d_inner).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_scale"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_ssm_state(cfg: ArchConfig, batch: int) -> dict:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                         jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, conv_ch), jnp.bfloat16),
+    }
+
+
+def mamba_decode_step(cfg: ArchConfig, p: dict, x: jax.Array, state: dict
+                      ) -> tuple[jax.Array, dict]:
+    """x: (B, 1, D) -> (B, 1, D) with O(1) state update."""
+    b = x.shape[0]
+    nh, hd, ns = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    zxbcdt = x @ p["in_proj"]
+    z, xs, Bm, Cm, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"], state["conv"])
+    xs, Bm, Cm = (xbc[..., :cfg.d_inner],
+                  xbc[..., cfg.d_inner:cfg.d_inner + ns],
+                  xbc[..., cfg.d_inner + ns:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(b, nh, hd).astype(jnp.float32)
+    Bf = Bm[:, 0].astype(jnp.float32)  # (B,ns)
+    Cf = Cm[:, 0].astype(jnp.float32)
+    decay = jnp.exp(dt * A)  # (B,H)
+    new_ssm = (state["ssm"] * decay[:, :, None, None]
+               + jnp.einsum("bh,bn,bhd->bhdn", dt, Bf, xh))
+    y = jnp.einsum("bn,bhdn->bhd", Cf, new_ssm)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, cfg.d_inner).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_scale"], cfg.norm_eps)
+    return y @ p["out_proj"], {"ssm": new_ssm, "conv": conv_state}

@@ -1,0 +1,512 @@
+"""Model assembly: decoder-only / MoE / hybrid(Mamba2+shared-attn) / RWKV /
+encoder-decoder / VLM — one scan-over-layers LM with per-family blocks.
+
+Public surface:
+    model_defs(cfg)                  -> PDef tree (single source of truth)
+    init_params(cfg, key)            -> params pytree (eval_shape-safe)
+    forward_loss(cfg, params, batch) -> (loss, metrics)         [train]
+    forward(cfg, params, batch)      -> logits                  [prefill]
+    init_decode_state(cfg, batch, cache_len) -> state
+    decode_step(cfg, params, state, tokens)  -> (logits, state) [serve]
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import rwkv as rwkv_mod
+from repro.models import ssm as ssm_mod
+from repro.parallel.sharding import (
+    PDef, current_mesh, current_rules, init_from_defs, shard_act,
+    shardings_from_defs, specs_from_defs, stack_defs,
+)
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+
+def _dense_layer_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    defs = {
+        "ln1": L.rms_norm_defs(d),
+        "attn": attn.attention_defs(cfg),
+        "ln2": L.rms_norm_defs(d),
+    }
+    if cfg.num_experts:
+        defs["moe"] = moe_mod.moe_defs(cfg)
+    else:
+        defs["mlp"] = L.mlp_defs(cfg)
+    return defs
+
+
+def _rwkv_layer_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": L.rms_norm_defs(d),
+        "tm": rwkv_mod.rwkv_defs(cfg),
+        "ln2": L.rms_norm_defs(d),
+    }
+
+
+def _mamba_layer_defs(cfg: ArchConfig) -> dict:
+    return {"ln": L.rms_norm_defs(cfg.d_model), "mamba": ssm_mod.mamba_defs(cfg)}
+
+
+def _encoder_layer_defs(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": L.rms_norm_defs(cfg.d_model),
+        "attn": attn.attention_defs(cfg),
+        "ln2": L.rms_norm_defs(cfg.d_model),
+        "mlp": L.mlp_defs(cfg),
+    }
+
+
+def _decoder_xattn_layer_defs(cfg: ArchConfig) -> dict:
+    defs = _encoder_layer_defs(cfg)
+    defs["ln_x"] = L.rms_norm_defs(cfg.d_model)
+    defs["xattn"] = attn.attention_defs(cfg, cross=True)
+    return defs
+
+
+def hybrid_groups(cfg: ArchConfig) -> tuple[int, int]:
+    """(num_groups, tail) — zamba: shared attn block heads each group."""
+    g = cfg.attn_every or cfg.num_layers
+    return cfg.num_layers // g, cfg.num_layers % g
+
+
+def model_defs(cfg: ArchConfig) -> dict:
+    defs: dict[str, Any] = {"embedding": L.embedding_defs(cfg)}
+    defs["final_norm"] = L.rms_norm_defs(cfg.d_model)
+
+    if cfg.family == "ssm":
+        defs["layers"] = stack_defs(_rwkv_layer_defs(cfg), cfg.num_layers)
+    elif cfg.family == "hybrid":
+        ng, tail = hybrid_groups(cfg)
+        per_group = stack_defs(_mamba_layer_defs(cfg), cfg.attn_every)
+        defs["groups"] = stack_defs(per_group, ng)
+        if tail:
+            defs["tail"] = stack_defs(_mamba_layer_defs(cfg), tail)
+        defs["shared_attn"] = {
+            "ln": L.rms_norm_defs(cfg.d_model),
+            "attn": attn.attention_defs(cfg),
+        }
+    elif cfg.is_encdec:
+        defs["encoder"] = stack_defs(_encoder_layer_defs(cfg), cfg.encoder_layers)
+        defs["enc_norm"] = L.rms_norm_defs(cfg.d_model)
+        defs["layers"] = stack_defs(_decoder_xattn_layer_defs(cfg), cfg.num_layers)
+    else:  # dense / moe / vlm
+        defs["layers"] = stack_defs(_dense_layer_defs(cfg), cfg.num_layers)
+
+    if cfg.frontend == "vision":
+        defs["frontend"] = {
+            "proj": PDef((cfg.d_model, cfg.d_model), ("fsdp", "embed")),
+            "ln": L.rms_norm_defs(cfg.d_model),
+        }
+    elif cfg.frontend == "audio":
+        defs["frontend"] = {
+            "proj": PDef((cfg.d_model, cfg.d_model), ("fsdp", "embed")),
+        }
+    return defs
+
+
+def init_params(cfg: ArchConfig, key: jax.Array):
+    return init_from_defs(key, model_defs(cfg), jnp.dtype(cfg.dtype))
+
+
+def param_specs(cfg: ArchConfig, rules, mesh=None):
+    return specs_from_defs(model_defs(cfg), rules, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Blocks (single layer)
+# ---------------------------------------------------------------------------
+
+
+def _residual(x: jax.Array) -> jax.Array:
+    """Pin the residual stream at block boundaries — this is what the remat
+    stack saves, so its sharding (batch × seq-SP) bounds train memory."""
+    return shard_act(x, ("batch", "seq", "embed"), essential=True)
+
+
+def _dense_block(cfg: ArchConfig, p: dict, x: jax.Array, *, mode: str):
+    h = attn.attention(cfg, p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                       causal=True, window=cfg.sliding_window, mode=mode)
+    x = _residual(x + h)
+    xn = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.num_experts:
+        h2, aux = moe_mod.moe_apply(cfg, p["moe"], xn)
+    else:
+        h2, aux = L.mlp_apply(cfg, p["mlp"], xn), jnp.zeros((), jnp.float32)
+    return _residual(x + h2), aux
+
+
+def _rwkv_block(cfg: ArchConfig, p: dict, x: jax.Array, *, mode: str):
+    x = _residual(x + rwkv_mod.rwkv_time_mix(
+        cfg, p["tm"], L.rms_norm(x, p["ln1"], cfg.norm_eps), mode=mode))
+    x = _residual(x + rwkv_mod.rwkv_channel_mix(
+        cfg, p["tm"], L.rms_norm(x, p["ln2"], cfg.norm_eps)))
+    return x, jnp.zeros((), jnp.float32)
+
+
+def _hybrid_group_block(cfg: ArchConfig, p_group: dict, shared: dict,
+                        x: jax.Array, *, mode: str):
+    h = attn.attention(cfg, shared["attn"],
+                       L.rms_norm(x, shared["ln"], cfg.norm_eps),
+                       causal=True, mode=mode)
+    x = _residual(x + h)
+    for i in range(cfg.attn_every):
+        p_i = jax.tree.map(lambda v: v[i], p_group)
+        x = _residual(x + ssm_mod.mamba_apply(
+            cfg, p_i["mamba"], L.rms_norm(x, p_i["ln"], cfg.norm_eps),
+            mode=mode))
+    return x, jnp.zeros((), jnp.float32)
+
+
+def _mamba_block(cfg: ArchConfig, p: dict, x: jax.Array, *, mode: str):
+    return _residual(x + ssm_mod.mamba_apply(
+        cfg, p["mamba"], L.rms_norm(x, p["ln"], cfg.norm_eps), mode=mode))
+
+
+def _encoder_block(cfg: ArchConfig, p: dict, x: jax.Array, *, mode: str):
+    x = _residual(x + attn.attention(
+        cfg, p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+        causal=False, mode=mode))
+    return _residual(
+        x + L.mlp_apply(cfg, p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps)))
+
+
+def _decoder_xattn_block(cfg: ArchConfig, p: dict, x: jax.Array,
+                         memory: jax.Array, *, mode: str):
+    x = _residual(x + attn.attention(
+        cfg, p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+        causal=True, mode=mode))
+    x = _residual(x + attn.attention(
+        cfg, p["xattn"], L.rms_norm(x, p["ln_x"], cfg.norm_eps),
+        kv_x=memory, causal=False, rope=False, mode=mode))
+    x = _residual(
+        x + L.mlp_apply(cfg, p["mlp"], L.rms_norm(x, p["ln2"], cfg.norm_eps)))
+    return x, jnp.zeros((), jnp.float32)
+
+
+def _constrain_layer_params(p_l, defs: dict):
+    """Pin one scanned layer slice to its parameter sharding INSIDE the scan
+    body. The transpose of with_sharding_constraint constrains the grad
+    cotangent too, so backward reduce-scatters each layer's weight grads
+    per iteration instead of carrying a data-unsharded stacked grad buffer
+    through the whole backward scan (12 GiB/device for grok otherwise)."""
+    rules, mesh = current_rules(), current_mesh()
+    if rules is None or mesh is None:
+        return p_l
+    sh = shardings_from_defs(defs, rules, mesh)
+    return jax.tree.map(
+        lambda x, s: jax.lax.with_sharding_constraint(x, s), p_l, sh)
+
+
+def _maybe_remat(fn, remat: str):
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Input embedding (incl. modality frontends)
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg: ArchConfig, params: dict, batch: dict) -> jax.Array:
+    x = L.embed_tokens(cfg, params["embedding"], batch["tokens"])
+    if cfg.frontend == "vision" and "patches" in batch:
+        fp = params["frontend"]
+        patches = batch["patches"].astype(x.dtype) @ fp["proj"]
+        patches = L.rms_norm(patches, fp["ln"], cfg.norm_eps)
+        x = jnp.concatenate([patches, x], axis=1)
+        x = shard_act(x, ("batch", "seq", "embed"))
+    return x
+
+
+def _encode(cfg: ArchConfig, params: dict, batch: dict, *, mode: str,
+            remat: str = "none") -> jax.Array:
+    """Audio/enc-dec: run the encoder over stub frame embeddings."""
+    frames = batch["frames"].astype(jnp.dtype(cfg.dtype))
+    x = frames @ params["frontend"]["proj"]
+    x = shard_act(x, ("batch", "seq", "embed"))
+    edefs = _encoder_layer_defs(cfg)
+    block = _maybe_remat(
+        lambda p_l, x: _encoder_block(cfg, p_l, x, mode=mode), remat)
+
+    def body(carry, p_l):
+        return block(_constrain_layer_params(p_l, edefs), carry), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: ArchConfig, params: dict, batch: dict, *, mode: str = "exec",
+            remat: Optional[str] = None) -> tuple[jax.Array, jax.Array]:
+    """Returns (logits, moe_aux_loss)."""
+    remat = cfg.remat if remat is None else remat
+    x = _embed_inputs(cfg, params, batch)
+
+    if cfg.family == "ssm":
+        ldefs = _rwkv_layer_defs(cfg)
+        block = _maybe_remat(
+            lambda p_l, x: _rwkv_block(cfg, p_l, x, mode=mode), remat)
+
+        def body(carry, p_l):
+            x, aux = carry
+            x, a = block(_constrain_layer_params(p_l, ldefs), x)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+    elif cfg.family == "hybrid":
+        gdefs = stack_defs(_mamba_layer_defs(cfg), cfg.attn_every)
+        block = _maybe_remat(
+            lambda p_g, shared, x: _hybrid_group_block(cfg, p_g, shared, x,
+                                                       mode=mode), remat)
+
+        def body(carry, p_g):
+            x, aux = carry
+            x, a = block(_constrain_layer_params(p_g, gdefs),
+                         params["shared_attn"], x)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["groups"])
+        if "tail" in params:
+            tdefs = _mamba_layer_defs(cfg)
+            tail_block = _maybe_remat(
+                lambda p_l, x: _mamba_block(cfg, p_l, x, mode=mode), remat)
+
+            def tbody(carry, p_l):
+                return tail_block(_constrain_layer_params(p_l, tdefs),
+                                  carry), None
+
+            x, _ = jax.lax.scan(tbody, x, params["tail"])
+    elif cfg.is_encdec:
+        memory = _encode(cfg, params, batch, mode=mode, remat=remat)
+        ldefs = _decoder_xattn_layer_defs(cfg)
+        block = _maybe_remat(
+            lambda p_l, mem, x: _decoder_xattn_block(cfg, p_l, x, mem, mode=mode),
+            remat)
+
+        def body(carry, p_l):
+            x, aux = carry
+            x, a = block(_constrain_layer_params(p_l, ldefs), memory, x)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+    else:
+        ldefs = _dense_layer_defs(cfg)
+        block = _maybe_remat(
+            lambda p_l, x: _dense_block(cfg, p_l, x, mode=mode), remat)
+
+        def body(carry, p_l):
+            x, aux = carry
+            x, a = block(_constrain_layer_params(p_l, ldefs), x)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(cfg, params["embedding"], x)
+    return logits, aux
+
+
+def forward_loss(cfg: ArchConfig, params: dict, batch: dict, *,
+                 mode: str = "exec", remat: Optional[str] = None,
+                 aux_weight: float = 0.01):
+    logits, aux = forward(cfg, params, batch, mode=mode, remat=remat)
+    mask = batch.get("loss_mask")
+    loss = L.cross_entropy_loss(logits, batch["labels"], mask)
+    total = loss + aux_weight * aux
+    return total, {"ce_loss": loss, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
+    state: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        per = rwkv_mod.init_rwkv_state(cfg, batch)
+        state["rwkv"] = jax.tree.map(
+            lambda v: jnp.broadcast_to(v[None], (cfg.num_layers,) + v.shape),
+            per)
+    elif cfg.family == "hybrid":
+        ng, tail = hybrid_groups(cfg)
+        m = ssm_mod.init_ssm_state(cfg, batch)
+
+        def rep(v, n):
+            return jnp.broadcast_to(v[None], (n,) + v.shape)
+
+        state["mamba"] = jax.tree.map(lambda v: rep(v, ng * cfg.attn_every), m)
+        if tail:
+            state["mamba_tail"] = jax.tree.map(lambda v: rep(v, tail), m)
+        kv = attn.init_kv_cache(cfg, batch, cache_len)
+        state["attn"] = jax.tree.map(lambda v: rep(v, ng), kv)
+    elif cfg.is_encdec:
+        kv = attn.init_kv_cache(cfg, batch, cache_len)
+        state["self"] = jax.tree.map(
+            lambda v: jnp.broadcast_to(v[None], (cfg.num_layers,) + v.shape), kv)
+        hd = cfg.resolved_head_dim
+        state["cross_k"] = jnp.zeros(
+            (cfg.num_layers, batch, cache_len, cfg.num_kv_heads, hd), jnp.bfloat16)
+        state["cross_v"] = jnp.zeros_like(state["cross_k"])
+    else:
+        kv = attn.init_kv_cache(cfg, batch, cache_len,
+                                window=cfg.sliding_window)
+        state["kv"] = jax.tree.map(
+            lambda v: jnp.broadcast_to(v[None], (cfg.num_layers,) + v.shape), kv)
+    return state
+
+
+def decode_state_logical_axes(cfg: ArchConfig, state: dict) -> dict:
+    """Logical sharding axes mirroring init_decode_state's structure."""
+    kv_axes = ("layers",) + attn.cache_logical_axes()["k"]
+    out: dict[str, Any] = {"pos": ()}
+    if cfg.family == "ssm":
+        out["rwkv"] = {
+            "wkv": ("layers", "batch", "rwkv_heads", None, None),
+            "tm_x": ("layers", "batch", "embed"),
+            "cm_x": ("layers", "batch", "embed"),
+        }
+    elif cfg.family == "hybrid":
+        m_axes = {"ssm": ("layers", "batch", "ssm_heads", None, None),
+                  "conv": ("layers", "batch", None, "ssm_inner")}
+        out["mamba"] = m_axes
+        if "mamba_tail" in state:
+            out["mamba_tail"] = m_axes
+        out["attn"] = {"k": kv_axes, "v": kv_axes}
+    elif cfg.is_encdec:
+        out["self"] = {"k": kv_axes, "v": kv_axes}
+        out["cross_k"] = kv_axes
+        out["cross_v"] = kv_axes
+    else:
+        out["kv"] = {"k": kv_axes, "v": kv_axes}
+    return out
+
+
+def decode_step(cfg: ArchConfig, params: dict, state: dict, tokens: jax.Array
+                ) -> tuple[jax.Array, dict]:
+    """tokens: (B,) int32 — one step. Returns (logits (B, V), new_state)."""
+    pos = state["pos"]
+    x = L.embed_tokens(cfg, params["embedding"], tokens[:, None])
+    new_state: dict[str, Any] = {"pos": pos + 1}
+
+    if cfg.family == "ssm":
+        def body(x, inp):
+            p_l, st = inp
+            xn = L.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+            y, wkv, tm_x = rwkv_mod.rwkv_time_mix(
+                cfg, p_l["tm"], xn, mode="probe",
+                state=st["wkv"], last_x=st["tm_x"].astype(xn.dtype))
+            x = x + y
+            xn2 = L.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+            y2, cm_x = rwkv_mod.rwkv_channel_mix(
+                cfg, p_l["tm"], xn2, last_x=st["cm_x"].astype(xn2.dtype))
+            x = x + y2
+            st_new = {"wkv": wkv, "tm_x": tm_x.astype(jnp.bfloat16),
+                      "cm_x": cm_x.astype(jnp.bfloat16)}
+            return x, st_new
+
+        x, new_rwkv = jax.lax.scan(body, x, (params["layers"], state["rwkv"]))
+        new_state["rwkv"] = new_rwkv
+    elif cfg.family == "hybrid":
+        ng, tail = hybrid_groups(cfg)
+        ae = cfg.attn_every
+        shared = params["shared_attn"]
+        mamba_states = jax.tree.map(
+            lambda v: v.reshape((ng, ae) + v.shape[1:]), state["mamba"])
+
+        def gbody(x, inp):
+            p_g, kv_g, m_g = inp
+            xn = L.rms_norm(x, shared["ln"], cfg.norm_eps)
+            y, kv_new = attn.decode_attention(cfg, shared["attn"], xn, kv_g, pos)
+            x = x + y
+            m_new = []
+            for i in range(ae):
+                p_i = jax.tree.map(lambda v: v[i], p_g)
+                m_i = jax.tree.map(lambda v: v[i], m_g)
+                xn = L.rms_norm(x, p_i["ln"], cfg.norm_eps)
+                y, m_i2 = ssm_mod.mamba_decode_step(cfg, p_i["mamba"], xn, m_i)
+                x = x + y
+                m_new.append(m_i2)
+            m_new = jax.tree.map(lambda *vs: jnp.stack(vs), *m_new)
+            return x, (kv_new, m_new)
+
+        x, (kv_new, m_new) = jax.lax.scan(
+            gbody, x, (params["groups"], state["attn"], mamba_states))
+        new_state["attn"] = kv_new
+        new_state["mamba"] = jax.tree.map(
+            lambda v: v.reshape((ng * ae,) + v.shape[2:]), m_new)
+        if tail:
+            def tbody(x, inp):
+                p_l, m_l = inp
+                xn = L.rms_norm(x, p_l["ln"], cfg.norm_eps)
+                y, m_l2 = ssm_mod.mamba_decode_step(cfg, p_l["mamba"], xn, m_l)
+                return x + y, m_l2
+
+            x, mt_new = jax.lax.scan(tbody, x,
+                                     (params["tail"], state["mamba_tail"]))
+            new_state["mamba_tail"] = mt_new
+    elif cfg.is_encdec:
+        def body(x, inp):
+            p_l, kv_l, ck, cv = inp
+            xn = L.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+            y, kv_new = attn.decode_attention(cfg, p_l["attn"], xn, kv_l, pos)
+            x = x + y
+            xn = L.rms_norm(x, p_l["ln_x"], cfg.norm_eps)
+            y, _ = attn.decode_attention(cfg, p_l["xattn"], xn, {}, pos,
+                                         kv_memory=(ck, cv), rope=False)
+            x = x + y
+            xn = L.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+            x = x + L.mlp_apply(cfg, p_l["mlp"], xn)
+            return x, kv_new
+
+        x, kv_new = jax.lax.scan(
+            body, x, (params["layers"], state["self"],
+                      state["cross_k"], state["cross_v"]))
+        new_state["self"] = kv_new
+        new_state["cross_k"] = state["cross_k"]
+        new_state["cross_v"] = state["cross_v"]
+    else:
+        def body(x, inp):
+            p_l, kv_l = inp
+            xn = L.rms_norm(x, p_l["ln1"], cfg.norm_eps)
+            y, kv_new = attn.decode_attention(
+                cfg, p_l["attn"], xn, kv_l, pos, window=cfg.sliding_window)
+            x = x + y
+            xn = L.rms_norm(x, p_l["ln2"], cfg.norm_eps)
+            if cfg.num_experts:
+                y2, _ = moe_mod.moe_apply(cfg, p_l["moe"], xn)
+            else:
+                y2 = L.mlp_apply(cfg, p_l["mlp"], xn)
+            return x + y2, kv_new
+
+        x, kv_new = jax.lax.scan(body, x, (params["layers"], state["kv"]))
+        new_state["kv"] = kv_new
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_logits(cfg, params["embedding"], x)
+    return logits[:, 0], new_state

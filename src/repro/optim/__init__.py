@@ -1,0 +1,11 @@
+from repro.optim.adamw import AdamWConfig, adamw_update, global_norm, init_opt_state
+from repro.optim.schedule import rsqrt, warmup_cosine
+from repro.optim.grad_compression import (
+    compress, compress_with_feedback, decompress, init_error_feedback,
+)
+
+__all__ = [
+    "AdamWConfig", "adamw_update", "global_norm", "init_opt_state",
+    "rsqrt", "warmup_cosine",
+    "compress", "compress_with_feedback", "decompress", "init_error_feedback",
+]

@@ -1,0 +1,109 @@
+"""Adafactor-style optimizer: factored second moment + bf16 first moment.
+
+State cost ≈ 2 (m, bf16) + ~0 (factored v) = 4 B/param with bf16 params —
+vs AdamW's 10 B/param. This is what lets grok-1-314b train on a single
+16 GB/chip v5e pod (256 chips): 316e9 × 4 / 256 ≈ 4.9 GiB of state/device.
+
+Follows Shazeer & Stern (2018): v is stored as row/col means for matrices,
+full for vectors; update is RMS-clipped; first moment kept (momentum) in
+bf16. Update math in f32.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdafactorConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    decay: float = 0.99  # second-moment decay
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+
+
+def init_factored_state(params: Any) -> dict:
+    def vr(p):
+        if p.ndim >= 2:
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    def vc(p):
+        if p.ndim >= 2:
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        return jnp.zeros((0,), jnp.float32)
+
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params),
+        "vr": jax.tree.map(vr, params),
+        "vc": jax.tree.map(vc, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+_SEQ_THRESHOLD_BYTES = 64 * 2**20
+
+
+def _sequenced_updates(upd, items: list[tuple]) -> list[tuple]:
+    """Run per-leaf updates, CHAINING large leaves with optimization
+    barriers so their f32 temporaries (g², v̂, u, …) never coexist — the
+    peak-memory difference is several GiB/device for stacked MoE weights."""
+    out = []
+    token = None
+    for item in items:
+        big = item[0].size * 4 > _SEQ_THRESHOLD_BYTES
+        if big and token is not None:
+            item, _ = jax.lax.optimization_barrier((item, token))
+        res = upd(*item)
+        if big:
+            token = res[0]
+        out.append(res)
+    return out
+
+
+def adafactor_update(params: Any, grads: Any, state: dict,
+                     cfg: AdafactorConfig, lr_scale: jax.Array | float = 1.0):
+    count = state["count"] + 1
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, vr, vc):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + cfg.eps
+        if p.ndim >= 2:
+            vr2 = cfg.decay * vr + (1 - cfg.decay) * jnp.mean(g2, axis=-1)
+            vc2 = cfg.decay * vc + (1 - cfg.decay) * jnp.mean(g2, axis=-2)
+            denom = jnp.maximum(jnp.mean(vr2, axis=-1, keepdims=True), cfg.eps)
+            vhat = (vr2[..., None] * vc2[..., None, :]) / denom[..., None]
+        else:
+            vr2 = cfg.decay * vr + (1 - cfg.decay) * g2
+            vc2 = vc
+            vhat = vr2
+        u = g * jax.lax.rsqrt(vhat + cfg.eps)
+        # RMS clip
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + cfg.eps)
+        u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        m2 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * u
+        step = m2
+        if cfg.weight_decay and p.ndim >= 2:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * step
+        return p2.astype(p.dtype), m2.astype(jnp.bfloat16), vr2, vc2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_vr = treedef.flatten_up_to(state["vr"])
+    flat_vc = treedef.flatten_up_to(state["vc"])
+    out = _sequenced_updates(
+        upd, list(zip(flat_p, flat_g, flat_m, flat_vr, flat_vc)))
+    return (treedef.unflatten([o[0] for o in out]),
+            {"m": treedef.unflatten([o[1] for o in out]),
+             "vr": treedef.unflatten([o[2] for o in out]),
+             "vc": treedef.unflatten([o[3] for o in out]),
+             "count": count},
+            {"lr": lr})

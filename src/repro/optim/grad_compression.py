@@ -1,0 +1,55 @@
+"""Int8 gradient compression with error feedback (cross-pod reduce trick).
+
+At 512+ chips the cross-pod (DCI-crossing) gradient reduce is the scarcest
+bandwidth. Quantizing the pod-boundary reduce to int8 cuts those wire bytes
+4× (the dry-run's collective term scales accordingly); error feedback keeps
+the optimizer unbiased in the long run (residuals re-injected next step).
+
+``compress/decompress`` are real jittable ops; the train step applies them
+around the pod-axis reduction when enabled, carrying the EF residual in the
+train state.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 quantization. Returns (q, scale)."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(grads: Any, residuals: Any):
+    """Returns (decompressed_grads, new_residuals).
+
+    g' = Q(g + r);  r' = (g + r) - g'  — standard EF-SGD construction."""
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, s = compress(corrected)
+        approx = decompress(q, s)
+        return approx, corrected - approx
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def compression_ratio() -> float:
+    return 4.0  # f32 -> int8 wire bytes on the compressed reduce

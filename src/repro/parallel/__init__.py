@@ -1,0 +1,25 @@
+from repro.parallel.sharding import (
+    PDef,
+    ShardingRules,
+    init_from_defs,
+    named_sharding,
+    shard_act,
+    shardings_from_defs,
+    specs_from_defs,
+    stack_defs,
+    use_mesh,
+)
+from repro.parallel.layouts import rules_for
+
+__all__ = [
+    "PDef",
+    "ShardingRules",
+    "init_from_defs",
+    "named_sharding",
+    "shard_act",
+    "shardings_from_defs",
+    "specs_from_defs",
+    "stack_defs",
+    "use_mesh",
+    "rules_for",
+]

@@ -1,0 +1,66 @@
+"""Per-(arch, shape, mesh) sharding layout policy.
+
+``rules_for`` produces the baseline ShardingRules for a cell. The offload
+genome mutates the returned table (sharding-axis genes) — this is the
+paper's "which device group runs this region" decision surface on a TPU mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.parallel.sharding import DEFAULT_RULES, ShardingRules
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get(name, 1)
+
+
+def rules_for(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    mesh: Mesh,
+    overrides: Optional[dict] = None,
+) -> ShardingRules:
+    tp = _axis_size(mesh, "model")
+    rules = ShardingRules(dict(DEFAULT_RULES))
+
+    upd: dict = {}
+    # KV heads shard over model when divisible (MHA-ish archs).
+    if cfg.num_kv_heads and cfg.num_kv_heads % tp == 0:
+        upd["kv_heads"] = "model"
+        upd["act_kv_heads"] = "model"
+
+    # Heads not divisible by the model axis (e.g. llama3.2's 24 on 16) fall
+    # back to replicated attention compute via spec pruning; the FFN/vocab
+    # keep model-axis TP. For prefill, the §Perf hillclimb's winning layout
+    # is the default: shard attention internals over the QUERY SEQUENCE
+    # (9.7× compute, memory fits — no head-divisibility requirement).
+    if (cfg.num_heads and cfg.num_heads % tp != 0
+            and shape.kind == "prefill" and shape.seq_len % tp == 0):
+        upd["seq_inner"] = "model"
+
+    if shape.kind == "decode":
+        # flash-decode: batch over data(+pod); KV sequence over model.
+        upd["batch"] = ("pod", "data")
+        upd["kv_seq"] = "model"
+        upd["act_kv_heads"] = None  # cache is seq-sharded instead
+        if shape.global_batch == 1:
+            # long-context single-stream: spread KV over every axis.
+            upd["kv_seq"] = ("data", "model")
+        # decode attention reads the seq-sharded cache with replicated heads
+        upd["act_heads"] = None
+    else:
+        upd["batch"] = ("pod", "data")
+        # Sequence parallelism: the residual stream (and thus the remat-saved
+        # layer-boundary stack, L×mb×S×D — the largest train buffer) shards
+        # its seq dim over the model axis between blocks (Megatron-SP).
+        if shape.seq_len % tp == 0:
+            upd["seq"] = "model"
+
+    if overrides:
+        upd.update(overrides)
+    return rules.with_overrides(**upd)

@@ -1,0 +1,9 @@
+from repro.runtime.fault_tolerance import (
+    ElasticOrchestrator, HeartbeatMonitor, StragglerDetector,
+)
+from repro.runtime.serving import EngineStats, Request, ServingEngine
+
+__all__ = [
+    "ElasticOrchestrator", "HeartbeatMonitor", "StragglerDetector",
+    "EngineStats", "Request", "ServingEngine",
+]

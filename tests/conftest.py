@@ -1,0 +1,14 @@
+import os
+
+# Smoke tests and benches must see ONE device; only launch/dryrun.py forces
+# 512 placeholder devices (and only in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,107 @@
+"""Small-mesh dry-run integration: lower + compile cell programs on an 8-dev
+host mesh (subprocess so the 8-device XLA flag never leaks into this
+process), plus HLO collective parsing units."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.core.hlo_analysis import collective_stats, remat_stats
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json, dataclasses
+    import jax
+    from repro.configs import get_config, reduced, SHAPES
+    from repro.configs.base import ShapeSpec
+    from repro.launch.steps import build_cell_program
+    from repro.parallel.layouts import rules_for
+    from repro.parallel.sharding import use_mesh
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    out = {}
+    cells = [
+        ("llama3.2-3b", ShapeSpec("t", "train", 32, 8)),
+        ("mixtral-8x7b", ShapeSpec("p", "prefill", 64, 4)),
+        ("rwkv6-1.6b", ShapeSpec("d", "decode", 64, 4)),
+        ("zamba2-7b", ShapeSpec("d", "decode", 64, 4)),
+        ("seamless-m4t-medium", ShapeSpec("t", "train", 32, 8)),
+    ]
+    for arch, shape in cells:
+        cfg = dataclasses.replace(reduced(get_config(arch)), accum=2
+                                  if shape.kind == "train" else 1)
+        rules = rules_for(cfg, shape, mesh)
+        prog = build_cell_program(cfg, shape, mesh, rules)
+        with use_mesh(mesh, rules):
+            compiled = prog.lower().compile()
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        out[f"{arch}/{shape.kind}"] = {
+            "flops": float(ca.get("flops", 0)),
+            "temp": int(ma.temp_size_in_bytes),
+            "collectives": compiled.as_text().count("all-reduce"),
+        }
+    print(json.dumps(out))
+""")
+
+
+@pytest.fixture(scope="module")
+def small_mesh_results():
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"}, timeout=540)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def test_cells_compile_on_8dev_mesh(small_mesh_results):
+    assert len(small_mesh_results) == 5
+    for cell, rec in small_mesh_results.items():
+        assert rec["flops"] > 0, cell
+
+
+def test_sharded_programs_communicate(small_mesh_results):
+    train_cells = [c for c in small_mesh_results if "/train" in c]
+    assert any(small_mesh_results[c]["collectives"] > 0 for c in train_cells)
+
+
+# ---------------------------------------------------------------------------
+# HLO analysis units
+# ---------------------------------------------------------------------------
+
+
+def test_collective_stats_parses_kinds():
+    hlo = """
+  %ar = f32[128,256] all-reduce(%x), replica_groups=[16,16]<=[256], to_apply=%add
+  %ag = bf16[64,512] all-gather(%y), replica_groups={{0,1,2,3}}, dimensions={1}
+  %cp = f32[32] collective-permute(%z), source_target_pairs={{0,1}}
+    """
+    stats = collective_stats(hlo, default_group=8)
+    assert stats.count == 3
+    ar = 2 * 128 * 256 * 4 * 15 / 16
+    ag = 64 * 512 * 2 * 3 / 4
+    cp = 32 * 4
+    assert stats.by_kind["all-reduce"] == pytest.approx(ar)
+    assert stats.by_kind["all-gather"] == pytest.approx(ag)
+    assert stats.by_kind["collective-permute"] == pytest.approx(cp)
+
+
+def test_collective_stats_ignores_noncollectives():
+    assert collective_stats("%d = f32[8,8] dot(%a, %b)").count == 0
+
+
+def test_remat_stats_counts_duplicate_dots():
+    hlo = """
+  %dot.1 = f32[128,64] dot(%a, %b)
+  %dot.2 = f32[128,64] dot(%a, %b)
+  %dot.3 = f32[32,16] dot(%c, %d)
+    """
+    st = remat_stats(hlo)
+    assert st["dot_signatures"] == 2
+    assert st["duplicated_signatures"] == 1
+    assert st["max_duplication"] == 2

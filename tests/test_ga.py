@@ -1,0 +1,138 @@
+"""GA + fitness + genome unit & property tests (paper §3.1, §4.1.2)."""
+import math
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fitness import Measurement, TIMEOUT_SECONDS, UserRequirement, fitness
+from repro.core.ga import GAConfig, run_ga
+from repro.core.genome import Gene, GenomeSpace, binary_space
+
+
+def test_fitness_formula_matches_paper():
+    m = Measurement(time_s=153.0, energy_ws=4131.0)
+    assert fitness(m) == pytest.approx((153.0 ** -0.5) * (4131.0 ** -0.5))
+
+
+def test_fitness_prefers_short_and_low_power():
+    fast_low = Measurement(time_s=19.0, energy_ws=2071.0)
+    slow_high = Measurement(time_s=153.0, energy_ws=4131.0)
+    assert fitness(fast_low) > fitness(slow_high)
+
+
+def test_timeout_penalty_is_10000s():
+    m = Measurement(time_s=50.0, energy_ws=100.0, timed_out=True)
+    assert m.effective_time() == TIMEOUT_SECONDS
+    assert fitness(m) < fitness(Measurement(time_s=9000.0, energy_ws=100.0))
+
+
+def test_infeasible_scored_like_timeout():
+    m = Measurement(time_s=1.0, energy_ws=1.0, feasible=False)
+    assert m.effective_time() == TIMEOUT_SECONDS
+
+
+@given(t=st.floats(0.01, 1e4), e=st.floats(0.01, 1e7))
+@settings(max_examples=50, deadline=None)
+def test_fitness_monotonicity(t, e):
+    base = fitness(Measurement(time_s=t, energy_ws=e))
+    assert fitness(Measurement(time_s=t * 2, energy_ws=e)) < base
+    assert fitness(Measurement(time_s=t, energy_ws=e * 2)) < base
+
+
+@given(t=st.floats(0.01, 1e4), e=st.floats(0.01, 1e7))
+@settings(max_examples=50, deadline=None)
+def test_fitness_sqrt_flattening(t, e):
+    """(-1/2) exponents: doubling time costs sqrt(2), not 2 (paper §4.1.2)."""
+    f1 = fitness(Measurement(time_s=t, energy_ws=e))
+    f2 = fitness(Measurement(time_s=2 * t, energy_ws=e))
+    assert f1 / f2 == pytest.approx(math.sqrt(2), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Genome space
+# ---------------------------------------------------------------------------
+
+
+def test_binary_space_matches_paper_genome():
+    space = binary_space([f"loop{i}" for i in range(13)])
+    assert len(space.genes) == 13
+    assert space.size == 2 ** 13
+
+
+@given(st.integers(2, 12), st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_crossover_preserves_genes(n, seed):
+    space = binary_space([f"u{i}" for i in range(n)])
+    rng = random.Random(seed)
+    a, b = space.random(rng), space.random(rng)
+    c, d = space.crossover(a, b, rng)
+    for i in range(n):
+        assert {c[i], d[i]} == {a[i], b[i]}
+
+
+@given(st.integers(1, 12), st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_mutation_stays_in_choice_range(n, seed):
+    space = GenomeSpace(tuple(Gene(f"g{i}", (0, 1, 2)) for i in range(n)))
+    rng = random.Random(seed)
+    g = space.mutate(space.random(rng), 0.5, rng)
+    assert all(0 <= v < 3 for v in g)
+
+
+def test_decode_encode_roundtrip():
+    space = GenomeSpace((Gene("remat", ("full", "dots", "none")),
+                         Gene("overlap", (True, False))))
+    g = (1, 0)
+    assert space.encode(space.decode(g)) == g
+
+
+# ---------------------------------------------------------------------------
+# GA behaviour
+# ---------------------------------------------------------------------------
+
+
+def _toy_measure(bits):
+    """Optimum = all ones; time & energy both improve per set bit."""
+    ones = sum(bits)
+    t = 100.0 / (1 + ones)
+    return Measurement(time_s=t, energy_ws=27.0 * t + 5.0 * ones)
+
+
+def test_ga_finds_optimum_on_toy_problem():
+    space = binary_space([f"u{i}" for i in range(8)])
+    res = run_ga(space, _toy_measure,
+                 GAConfig(population=8, generations=12, seed=3))
+    assert sum(res.best.genome) >= 7  # near-optimal
+
+
+def test_ga_elitism_monotone_best():
+    space = binary_space([f"u{i}" for i in range(8)])
+    res = run_ga(space, _toy_measure,
+                 GAConfig(population=8, generations=10, seed=0))
+    best_per_gen = [max(r.fitness for r in gen) for gen in res.history]
+    for a, b in zip(best_per_gen, best_per_gen[1:]):
+        assert b >= a - 1e-12  # elite preserved => never regresses
+
+
+def test_ga_caches_repeat_measurements():
+    calls = {"n": 0}
+
+    def measure(bits):
+        calls["n"] += 1
+        return _toy_measure(bits)
+
+    space = binary_space([f"u{i}" for i in range(4)])
+    res = run_ga(space, measure, GAConfig(population=6, generations=8, seed=1))
+    assert res.evaluations == calls["n"]
+    assert res.evaluations <= space.size  # each pattern measured once
+    assert res.cache_hits > 0
+
+
+def test_user_requirement_gate():
+    req = UserRequirement(max_time_s=20.0, max_energy_ws=2500.0)
+    assert req.satisfied(Measurement(time_s=19.0, energy_ws=2071.0))
+    assert not req.satisfied(Measurement(time_s=25.0, energy_ws=2071.0))
+    assert not req.satisfied(Measurement(time_s=19.0, energy_ws=4131.0))
+    assert not req.satisfied(Measurement(time_s=1.0, energy_ws=1.0,
+                                         timed_out=True))

@@ -1,0 +1,143 @@
+"""Per-kernel allclose sweeps (shapes × dtypes) against the pure-jnp oracles,
+run in Pallas interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.himeno.kernel import himeno_jacobi_pallas
+from repro.kernels.himeno.ref import himeno_init, jacobi_ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.kernel import rms_norm_pallas
+from repro.kernels.rmsnorm.ref import rms_norm_ref
+from repro.kernels.wkv.kernel import wkv_pallas
+from repro.kernels.wkv.ref import wkv_ref
+
+
+# ---------------------------------------------------------------------------
+# Himeno stencil (the paper's workload)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("grid", [(5, 9, 17), (9, 17, 33), (17, 9, 17)])
+def test_himeno_kernel_matches_ref(grid):
+    st = himeno_init(grid)
+    args = (st["p"], st["a"], st["b"], st["c"], st["bnd"], st["wrk1"])
+    p_ref, g_ref = jacobi_ref(*args)
+    p_k, g_k = himeno_jacobi_pallas(*args, interpret=True)
+    np.testing.assert_allclose(p_k, p_ref, atol=1e-6)
+    assert float(g_k) == pytest.approx(float(g_ref), rel=1e-4)
+
+
+def test_himeno_kernel_multi_iter_convergent():
+    st = himeno_init((9, 17, 17))
+    p = st["p"]
+    gosas = []
+    for _ in range(5):
+        p, g = himeno_jacobi_pallas(p, st["a"], st["b"], st["c"], st["bnd"],
+                                    st["wrk1"], interpret=True)
+        gosas.append(float(g))
+    assert gosas[-1] < gosas[0]  # Jacobi residual decreases
+
+
+def test_himeno_kernel_nontrivial_coefficients():
+    key = jax.random.PRNGKey(0)
+    grid = (7, 9, 17)
+    ks = jax.random.split(key, 6)
+    p = jax.random.uniform(ks[0], grid)
+    a = jax.random.uniform(ks[1], (4,) + grid)
+    b = jax.random.uniform(ks[2], (3,) + grid) * 0.1
+    c = jax.random.uniform(ks[3], (3,) + grid)
+    bnd = (jax.random.uniform(ks[4], grid) > 0.5).astype(jnp.float32)
+    wrk1 = jax.random.uniform(ks[5], grid) * 0.01
+    p_ref, g_ref = jacobi_ref(p, a, b, c, bnd, wrk1)
+    p_k, g_k = himeno_jacobi_pallas(p, a, b, c, bnd, wrk1, interpret=True)
+    np.testing.assert_allclose(p_k, p_ref, atol=1e-5)
+    assert float(g_k) == pytest.approx(float(g_ref), rel=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,h,s,d", [(1, 1, 32, 8), (2, 3, 64, 16),
+                                     (1, 2, 128, 32)])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 16), (False, 0)])
+def test_flash_matches_ref(b, h, s, d, causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(b * 100 + h), 3)
+    q, k, v = (jax.random.normal(kk, (b, h, s, d), jnp.float32) for kk in ks)
+    o_ref = attention_ref(q, k, v, causal=causal, window=window)
+    o = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                               block_q=16, block_k=16, interpret=True)
+    np.testing.assert_allclose(o, o_ref, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_dtypes(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q, k, v = (jax.random.normal(kk, (2, 2, 64, 16), jnp.float32).astype(dtype)
+               for kk in ks)
+    o_ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                          v.astype(jnp.float32))
+    o = flash_attention_pallas(q, k, v, block_q=32, block_k=32,
+                               interpret=True)
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(o.astype(jnp.float32), o_ref, atol=atol)
+
+
+def test_flash_block_shape_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q, k, v = (jax.random.normal(kk, (1, 2, 128, 16)) for kk in ks)
+    o1 = flash_attention_pallas(q, k, v, block_q=32, block_k=64,
+                                interpret=True)
+    o2 = flash_attention_pallas(q, k, v, block_q=128, block_k=16,
+                                interpret=True)
+    np.testing.assert_allclose(o1, o2, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape", [(8, 64), (4, 32, 128), (2, 8, 16, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_ref(shape, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, shape, jnp.float32).astype(dtype)
+    scale = jax.random.normal(k2, shape[-1:], jnp.float32)
+    o_ref = rms_norm_ref(x, scale)
+    o = rms_norm_pallas(x, scale, interpret=True)
+    np.testing.assert_allclose(o.astype(jnp.float32),
+                               o_ref.astype(jnp.float32), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# WKV (RWKV6 recurrence)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,h,s,d,chunk", [(1, 1, 32, 8, 8), (2, 2, 64, 16, 16),
+                                           (1, 2, 128, 16, 64)])
+def test_wkv_matches_sequential_ref(b, h, s, d, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(b + h + s), 5)
+    r, k, v = (jax.random.normal(kk, (b, h, s, d)) * 0.5 for kk in ks[:3])
+    lw = -jnp.exp(jax.random.normal(ks[3], (b, h, s, d)) * 0.5)
+    u = jax.random.normal(ks[4], (h, d)) * 0.1
+    o_ref, s_ref = wkv_ref(r, k, v, lw, u)
+    o, s_out = wkv_pallas(r, k, v, lw, u, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(o, o_ref, atol=5e-5)
+    np.testing.assert_allclose(s_out, s_ref, atol=5e-5)
+
+
+def test_wkv_chunk_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    r, k, v = (jax.random.normal(kk, (1, 2, 64, 8)) * 0.5 for kk in ks[:3])
+    lw = -jnp.exp(jax.random.normal(ks[3], (1, 2, 64, 8)) * 0.5)
+    u = jax.random.normal(ks[4], (2, 8)) * 0.1
+    o1, s1 = wkv_pallas(r, k, v, lw, u, chunk=8, interpret=True)
+    o2, s2 = wkv_pallas(r, k, v, lw, u, chunk=32, interpret=True)
+    np.testing.assert_allclose(o1, o2, atol=5e-5)
+    np.testing.assert_allclose(s1, s2, atol=5e-5)

@@ -1,0 +1,53 @@
+"""Layout knobs the §Perf hillclimb promoted: light constraints, kv_batch,
+seq-sharded attention default for heads-nondivisible prefill."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ShapeSpec
+from repro.parallel.layouts import rules_for
+from repro.parallel.sharding import ShardingRules, shard_act, use_mesh
+
+
+def test_light_rules_override_roundtrip():
+    r = ShardingRules().with_overrides(light=True, seq=None)
+    assert r.light and r.mapping["seq"] is None
+    r2 = r.with_overrides(act_ffn=None)
+    assert r2.light  # stickiness through further overrides
+
+
+def test_kv_batch_axis_exists_and_defaults_to_data():
+    r = ShardingRules()
+    assert r.mapping["kv_batch"] == ("pod", "data")
+
+
+def test_llama_prefill_defaults_to_seq_sharded_attention():
+    # rules_for only reads axis sizes — a 16x16 stand-in suffices on 1 CPU
+    import types
+
+    import numpy as np
+
+    mesh = types.SimpleNamespace(axis_names=("data", "model"),
+                                 devices=np.empty((16, 16)))
+    cfg = get_config("llama3.2-3b")  # 24 heads, not divisible by 16
+    rules = rules_for(cfg, SHAPES["prefill_32k"], mesh)
+    assert rules.mapping["seq_inner"] == "model"
+    # train keeps the default (documented hillclimb target)
+    rules_t = rules_for(cfg, SHAPES["train_4k"], mesh)
+    assert rules_t.mapping["seq_inner"] is None
+    # divisible-head archs keep head TP for prefill
+    rules_q = rules_for(get_config("qwen1.5-110b"), SHAPES["prefill_32k"], mesh)
+    assert rules_q.mapping["seq_inner"] is None
+
+
+def test_light_mode_skips_advisory_constraints():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    x = jnp.ones((4, 8, 16))
+
+    with use_mesh(mesh, ShardingRules(light=True)):
+        y = shard_act(x, ("batch", "seq", "embed"))  # advisory -> no-op
+        assert y is x
+        z = shard_act(x, ("batch", "seq", "embed"), essential=True)
+        assert z is not x  # essential constraint still applied

@@ -1,0 +1,177 @@
+"""Power models, roofline terms, FPGA-path narrowing, mixed-env selection."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.arithmetic_intensity import himeno_unit_costs, lm_unit_costs
+from repro.core.candidates import NarrowingConfig, narrow_and_measure
+from repro.core.device_select import Destination, select_destination
+from repro.core.fitness import Measurement, UserRequirement
+from repro.core.power import PaperPowerModel, RooflineTerms, TpuPowerModel
+from repro.configs import SHAPES, get_config
+
+
+# ---------------------------------------------------------------------------
+# Power models
+# ---------------------------------------------------------------------------
+
+
+def test_paper_power_anchors():
+    pm = PaperPowerModel()
+    # all-CPU: 27 W for 153 s  ->  4131 Ws ("4080" in the paper's text)
+    assert pm.energy(153.0, 0.0) == pytest.approx(4131.0)
+    # fully offloaded: 27+82=109 W while device active
+    assert pm.average_watts(19.0, 19.0) == pytest.approx(109.0)
+    assert pm.energy(19.0, 19.0) == pytest.approx(19.0 * 109.0)
+
+
+@given(t=st.floats(0.1, 1e3), frac=st.floats(0.0, 1.0))
+@settings(max_examples=40, deadline=None)
+def test_paper_power_bounds(t, frac):
+    pm = PaperPowerModel()
+    w = pm.average_watts(t, t * frac)
+    assert 27.0 - 1e-9 <= w <= 109.0 + 1e-9
+
+
+def test_roofline_terms_and_dominance():
+    terms = RooflineTerms(flops=197e12 * 256, hbm_bytes=0.0,
+                          collective_bytes=0.0, chips=256)
+    assert terms.t_compute == pytest.approx(1.0)
+    assert terms.dominant() == "compute"
+    t2 = RooflineTerms(flops=0.0, hbm_bytes=819e9 * 256 * 2,
+                       collective_bytes=0.0, chips=256)
+    assert t2.t_memory == pytest.approx(2.0)
+    assert t2.dominant() == "memory"
+
+
+def test_overlap_vs_sequential_step_time():
+    terms = RooflineTerms(flops=197e12, hbm_bytes=819e9,
+                          collective_bytes=50e9, chips=1)
+    assert terms.step_time(overlap=True) == pytest.approx(1.0)
+    assert terms.step_time(overlap=False) == pytest.approx(3.0)
+
+
+def test_energy_overlap_saves_idle_only():
+    """Component energies are active-time integrals: overlapping shortens the
+    wall clock, so only the idle term shrinks (paper: W and s trade off)."""
+    pm = TpuPowerModel()
+    terms = RooflineTerms(flops=197e12, hbm_bytes=819e9,
+                          collective_bytes=0.0, chips=1)
+    e_overlap = terms.energy(pm, overlap=True)
+    e_seq = terms.energy(pm, overlap=False)
+    assert e_seq - e_overlap == pytest.approx(pm.p_idle * 1.0, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Arithmetic intensity (ROSE analogue)
+# ---------------------------------------------------------------------------
+
+
+def test_himeno_units_13_loops():
+    units = himeno_unit_costs((512, 256, 256), iters=62)
+    assert len(units) == 13
+    hot = max(units, key=lambda u: u.total_flops)
+    assert hot.name == "jacobi_stencil"
+    # the stencil has the highest arithmetic intensity of the loop units
+    ai = {u.name: u.intensity for u in units}
+    assert ai["jacobi_stencil"] == max(
+        ai[n] for n in ("jacobi_stencil", "gosa_reduction", "wrk2_write",
+                        "p_update"))
+
+
+def test_lm_units_cover_families():
+    for arch, expect in [("qwen1.5-110b", "mlp"), ("mixtral-8x7b", "moe"),
+                         ("rwkv6-1.6b", "rwkv"), ("zamba2-7b", "ssm"),
+                         ("seamless-m4t-medium", "cross_attention")]:
+        units = lm_unit_costs(get_config(arch), SHAPES["train_4k"])
+        assert expect in {u.name for u in units}, arch
+
+
+def test_model_flops_scale():
+    from repro.core.arithmetic_intensity import model_flops
+
+    cfg = get_config("qwen1.5-110b")
+    mf = model_flops(cfg, SHAPES["train_4k"])
+    n = cfg.param_count() - cfg.padded_vocab() * cfg.d_model
+    assert mf == pytest.approx(6 * n * SHAPES["train_4k"].tokens(), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# FPGA-path narrowing (§3.2)
+# ---------------------------------------------------------------------------
+
+
+def _fake_measure(units_by_name, base_t=100.0):
+    def measure(pattern):
+        t = base_t
+        for name in pattern:
+            # offloading the stencil helps a lot, others a little
+            t -= 60.0 if name == "jacobi_stencil" else 1.0
+        return Measurement(time_s=max(t, 1.0), energy_ws=27.0 * max(t, 1.0))
+
+    return measure
+
+
+def test_narrowing_funnel_monotone():
+    units = himeno_unit_costs((64, 64, 128), iters=8)
+    report = narrow_and_measure(
+        units, _fake_measure({u.name for u in units}),
+        NarrowingConfig(intensity_keep=3, tripcount_keep=3, max_measured=4))
+    assert len(report.after_intensity) <= 3
+    assert set(report.after_resource) <= set(report.after_tripcount)
+    assert len(report.measured_single) <= 4
+    # the hot loop survives every stage and wins
+    assert "jacobi_stencil" in report.after_resource
+    assert "jacobi_stencil" in report.best_pattern
+
+
+def test_narrowing_resource_precheck_rejects():
+    units = himeno_unit_costs((64, 64, 128), iters=8)
+    report = narrow_and_measure(
+        units, _fake_measure({u.name for u in units}),
+        NarrowingConfig(resource_limit=1.0))  # no kernel fits "VMEM"
+    # every unit with a real VMEM working set is rejected pre-compile
+    assert "jacobi_stencil" not in report.after_resource
+    assert all(u.vmem_bytes <= 1.0 for u in units
+               if u.name in report.after_resource)
+    assert "jacobi_stencil" not in report.best_pattern
+
+
+# ---------------------------------------------------------------------------
+# Mixed-environment selection (§3.3)
+# ---------------------------------------------------------------------------
+
+
+def _dest(name, cost, t, e):
+    return Destination(
+        name, cost, lambda: (name, Measurement(time_s=t, energy_ws=e)))
+
+
+def test_selection_cheap_to_expensive_order():
+    rep = select_destination([
+        _dest("fpga", 4 * 3600, 10.0, 250.0),
+        _dest("gpu", 60, 19.0, 2071.0),
+        _dest("manycore", 30, 40.0, 2680.0),
+    ])
+    assert rep.order == ["manycore", "gpu", "fpga"]
+    assert rep.chosen == "fpga"  # best fitness when everything verified
+
+
+def test_selection_early_exit_skips_expensive():
+    req = UserRequirement(max_time_s=50.0)
+    rep = select_destination([
+        _dest("fpga", 4 * 3600, 10.0, 250.0),
+        _dest("gpu", 60, 19.0, 2071.0),
+        _dest("manycore", 30, 40.0, 2680.0),
+    ], requirement=req)
+    assert rep.early_exit
+    assert rep.verified.keys() == {"manycore"}  # paper: stop at first satisfier
+    assert "fpga" in rep.skipped and "gpu" in rep.skipped
+
+
+def test_selection_handles_infeasible():
+    rep = select_destination([
+        Destination("bad", 1.0, lambda: ("bad", Measurement(
+            time_s=1.0, energy_ws=1.0, feasible=False))),
+        _dest("gpu", 60, 19.0, 2071.0),
+    ])
+    assert rep.chosen == "gpu"

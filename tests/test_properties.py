@@ -1,0 +1,141 @@
+"""Property-based tests on system invariants (hypothesis)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeSpec
+from repro import models as M
+
+
+def _cfg(arch, **kw):
+    base = dict(dtype="float32", attn_chunk=8, ssm_chunk=8)
+    base.update(kw)
+    return dataclasses.replace(reduced(get_config(arch)), **base)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "rwkv6-1.6b", "zamba2-7b",
+                                  "mixtral-8x7b"])
+def test_causality(arch):
+    """Changing future tokens must not change past logits (decoder-only)."""
+    cfg = _cfg(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    S, t = 16, 9
+    batch = M.synthetic_batch(cfg, ShapeSpec("p", "prefill", S, 2))
+    tokens = batch["tokens"]
+    logits1, _ = M.forward(cfg, params, {"tokens": tokens})
+    tokens2 = tokens.at[:, t:].set((tokens[:, t:] + 7) % cfg.vocab_size)
+    logits2, _ = M.forward(cfg, params, {"tokens": tokens2})
+    np.testing.assert_allclose(logits1[:, :t], logits2[:, :t],
+                               atol=1e-4, rtol=1e-4)
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=5, deadline=None)
+def test_batch_row_permutation_equivariance(seed):
+    """Permuting batch rows permutes outputs (no cross-row leakage — incl.
+    the MoE row-local dispatch)."""
+    cfg = _cfg("mixtral-8x7b")
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    tokens = jax.random.randint(jax.random.PRNGKey(seed), (4, 12), 0,
+                                cfg.vocab_size)
+    logits, _ = M.forward(cfg, params, {"tokens": tokens})
+    perm = jnp.array([2, 0, 3, 1])
+    logits_p, _ = M.forward(cfg, params, {"tokens": tokens[perm]})
+    np.testing.assert_allclose(logits_p, logits[perm], atol=2e-4, rtol=1e-4)
+
+
+def test_swa_limits_receptive_field():
+    """With window w, logits at position t ignore tokens earlier than
+    t - (w·L) (conservative bound: receptive field grows per layer)."""
+    cfg = _cfg("mixtral-8x7b", sliding_window=4, num_layers=1)
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    S = 16
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (1, S), 0,
+                                cfg.vocab_size)
+    logits1, _ = M.forward(cfg, params, {"tokens": tokens})
+    # perturb a token far outside the window of the last position
+    tokens2 = tokens.at[:, 2].set((tokens[:, 2] + 3) % cfg.vocab_size)
+    logits2, _ = M.forward(cfg, params, {"tokens": tokens2})
+    np.testing.assert_allclose(logits1[:, -1], logits2[:, -1],
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_loss_mask_excludes_positions():
+    cfg = _cfg("llama3.2-3b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    b = M.synthetic_batch(cfg, ShapeSpec("t", "train", 16, 2))
+    # corrupt the labels at masked positions: loss must not change
+    mask = b["loss_mask"].at[:, :8].set(0.0)
+    l1, _ = M.forward_loss(cfg, params, dict(b, loss_mask=mask), remat="none")
+    bad = b["labels"].at[:, :8].set(0)
+    l2, _ = M.forward_loss(cfg, params, dict(b, labels=bad, loss_mask=mask),
+                           remat="none")
+    assert float(l1) == pytest.approx(float(l2), rel=1e-6)
+
+
+def test_remat_does_not_change_loss():
+    cfg = _cfg("stablelm-1.6b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    b = M.synthetic_batch(cfg, ShapeSpec("t", "train", 16, 2))
+    losses = [float(M.forward_loss(cfg, params, b, remat=r)[0])
+              for r in ("none", "dots", "full")]
+    assert max(losses) - min(losses) < 1e-5
+
+
+def test_remat_does_not_change_grads():
+    cfg = _cfg("stablelm-1.6b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    b = M.synthetic_batch(cfg, ShapeSpec("t", "train", 16, 2))
+
+    def loss(p, r):
+        return M.forward_loss(cfg, p, b, remat=r)[0]
+
+    g1 = jax.grad(lambda p: loss(p, "none"))(params)
+    g2 = jax.grad(lambda p: loss(p, "full"))(params)
+    for a, c in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   atol=1e-5, rtol=1e-4)
+
+
+@given(chunk=st.sampled_from([4, 8, 16]))
+@settings(max_examples=3, deadline=None)
+def test_attention_chunk_invariance(chunk):
+    """Query-chunk size is a performance knob, never a semantics knob."""
+    cfg = _cfg("llama3.2-3b", attn_chunk=chunk)
+    cfg_ref = _cfg("llama3.2-3b", attn_chunk=16)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (2, 16), 0,
+                                cfg.vocab_size)
+    l1, _ = M.forward(cfg, params, {"tokens": tokens})
+    l2, _ = M.forward(cfg_ref, params, {"tokens": tokens})
+    np.testing.assert_allclose(l1, l2, atol=2e-4, rtol=1e-4)
+
+
+@given(cs=st.sampled_from([4, 8, 16]))
+@settings(max_examples=3, deadline=None)
+def test_ssm_chunk_invariance(cs):
+    cfg = _cfg("zamba2-7b", ssm_chunk=cs)
+    cfg_ref = _cfg("zamba2-7b", ssm_chunk=16)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(6), (2, 16), 0,
+                                cfg.vocab_size)
+    l1, _ = M.forward(cfg, params, {"tokens": tokens})
+    l2, _ = M.forward(cfg_ref, params, {"tokens": tokens})
+    np.testing.assert_allclose(l1, l2, atol=2e-4, rtol=1e-4)
+
+
+def test_probe_mode_semantics_match_exec():
+    """The roofline probes must compute the same function as the artifact."""
+    for arch in ("llama3.2-3b", "zamba2-7b", "rwkv6-1.6b", "mixtral-8x7b"):
+        cfg = _cfg(arch)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(7), (2, 16), 0,
+                                    cfg.vocab_size)
+        l_exec, _ = M.forward(cfg, params, {"tokens": tokens}, mode="exec")
+        l_probe, _ = M.forward(cfg, params, {"tokens": tokens}, mode="probe")
+        np.testing.assert_allclose(l_exec, l_probe, atol=2e-4, rtol=1e-4)

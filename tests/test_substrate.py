@@ -1,0 +1,264 @@
+"""Substrate tests: optimizer, grad compression, data pipeline, checkpoint,
+fault tolerance, reconfiguration policy."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import Checkpointer
+from repro.configs import SHAPES, get_config, reduced, smoke_shape
+from repro.core.reconfigure import ClusterState, ReconfigurePolicy
+from repro.data import DataConfig, SyntheticLMStream
+from repro.optim import (
+    AdamWConfig, adamw_update, compress, compress_with_feedback, decompress,
+    init_error_feedback, init_opt_state, warmup_cosine,
+)
+from repro.optim.adafactor import (
+    AdafactorConfig, adafactor_update, init_factored_state,
+)
+from repro.runtime import ElasticOrchestrator, HeartbeatMonitor, StragglerDetector
+
+
+# ---------------------------------------------------------------------------
+# Optimizers
+# ---------------------------------------------------------------------------
+
+
+def _quadratic_params(key):
+    return {"w": jax.random.normal(key, (4, 8), jnp.float32) + 2.0,
+            "b": jnp.ones((8,), jnp.float32)}
+
+
+def test_adamw_converges_on_quadratic():
+    params = _quadratic_params(jax.random.PRNGKey(0))
+    state = init_opt_state(params)
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"])) + jnp.sum(jnp.square(p["b"]))
+
+    l0 = float(loss(params))
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(params, g, state, cfg)
+    assert float(loss(params)) < 0.01 * l0
+
+
+def test_adamw_mixed_precision_dtypes():
+    params = {"w": jnp.ones((8, 8), jnp.bfloat16)}
+    state = init_opt_state(params)
+    g = {"w": jnp.full((8, 8), 0.1, jnp.bfloat16)}
+    p2, s2, metrics = adamw_update(params, g, state, AdamWConfig())
+    assert p2["w"].dtype == jnp.bfloat16
+    assert s2["m"]["w"].dtype == jnp.float32
+    assert jnp.isfinite(metrics["grad_norm"])
+
+
+def test_adafactor_state_is_small_and_converges():
+    params = {"w": jax.random.normal(jax.random.PRNGKey(1), (16, 8)) + 1.0}
+    state = init_factored_state(params)
+    # factored second moment: O(n+m) not O(n*m)
+    assert state["vr"]["w"].shape == (16,)
+    assert state["vc"]["w"].shape == (8,)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"]))
+
+    l0 = float(loss(params))
+    cfg = AdafactorConfig(lr=0.05)
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, state, _ = adafactor_update(params, g, state, cfg)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_warmup_cosine_shape():
+    assert float(warmup_cosine(0)) == 0.0
+    assert float(warmup_cosine(100)) == pytest.approx(1.0)
+    assert float(warmup_cosine(10_000)) == pytest.approx(0.1, abs=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Gradient compression (int8 + error feedback)
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_compress_roundtrip_bounded_error(seed):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 10
+    q, s = compress(g)
+    err = jnp.max(jnp.abs(decompress(q, s) - g))
+    assert float(err) <= float(s) * 0.5 + 1e-6  # half-ULP of the int8 grid
+
+
+def test_error_feedback_unbiased_over_time():
+    """EF: accumulated compressed updates converge to accumulated true grads."""
+    key = jax.random.PRNGKey(0)
+    params = {"w": jnp.zeros((32,), jnp.float32)}
+    resid = init_error_feedback(params)
+    true_sum = jnp.zeros((32,))
+    approx_sum = jnp.zeros((32,))
+    for i in range(50):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, i), (32,))}
+        approx, resid = compress_with_feedback(g, resid)
+        true_sum = true_sum + g["w"]
+        approx_sum = approx_sum + approx["w"]
+    # residual is bounded, so sums differ by at most the residual
+    np.testing.assert_allclose(approx_sum + resid["w"], true_sum, rtol=1e-4,
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_determinism_and_restart():
+    cfg = reduced(get_config("llama3.2-3b"))
+    shape = smoke_shape("train")
+    s1 = SyntheticLMStream(cfg, shape, DataConfig(seed=7))
+    s2 = SyntheticLMStream(cfg, shape, DataConfig(seed=7))
+    b1, b2 = s1.batch_at(42), s2.batch_at(42)
+    for k in b1:
+        np.testing.assert_array_equal(b1[k], b2[k])
+    assert not np.array_equal(s1.batch_at(0)["tokens"],
+                              s1.batch_at(1)["tokens"])
+
+
+def test_data_host_sharding_disjoint():
+    cfg = reduced(get_config("llama3.2-3b"))
+    shape = smoke_shape("train")
+    h0 = SyntheticLMStream(cfg, shape, DataConfig(seed=1, num_hosts=2,
+                                                  host_index=0))
+    h1 = SyntheticLMStream(cfg, shape, DataConfig(seed=1, num_hosts=2,
+                                                  host_index=1))
+    assert h0.local_batch == shape.global_batch // 2
+    assert not np.array_equal(h0.batch_at(0)["tokens"],
+                              h1.batch_at(0)["tokens"])
+
+
+def test_data_labels_are_next_tokens():
+    cfg = reduced(get_config("llama3.2-3b"))
+    b = SyntheticLMStream(cfg, smoke_shape("train")).batch_at(0)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+def test_prefetch_iterator():
+    cfg = reduced(get_config("llama3.2-3b"))
+    stream = SyntheticLMStream(cfg, smoke_shape("train"))
+    it = stream.prefetching(start_step=5)
+    step, batch = next(it)
+    assert step == 5
+    np.testing.assert_array_equal(batch["tokens"],
+                                  stream.batch_at(5)["tokens"])
+    it.close()
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep_last=2)
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+            "step": jnp.asarray(3)}
+    for step in (1, 2, 3):
+        ck.save(step, tree, blocking=True)
+    assert ck.latest_step() == 3
+    restored = ck.restore(3, tree)
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+    # gc kept only the last 2
+    steps = sorted(int(n.split("_")[1]) for n in os.listdir(tmp_path)
+                   if n.startswith("step_"))
+    assert steps == [2, 3]
+
+
+def test_checkpoint_detects_shape_mismatch(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"a": jnp.ones((2, 2))}, blocking=True)
+    with pytest.raises(ValueError):
+        ck.restore(1, {"a": jnp.ones((3, 3))})
+
+
+def test_checkpoint_async_then_wait(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(7, {"a": jnp.ones((128, 128))})
+    ck.wait()
+    assert ck.latest_step() == 7
+
+
+# ---------------------------------------------------------------------------
+# Fault tolerance + reconfiguration (Step 7)
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_failure_detection():
+    mon = HeartbeatMonitor(num_nodes=4, interval_s=10, grace_intervals=3)
+    for n in range(4):
+        mon.beat(n, now=0.0)
+    assert mon.sweep(now=29.0) == []
+    mon.beat(0, now=29.0)
+    mon.beat(1, now=29.0)
+    mon.beat(2, now=29.0)
+    failed = mon.sweep(now=31.0)
+    assert failed == [3]
+    assert mon.healthy_count() == 3
+
+
+def test_straggler_detection_and_deadline():
+    det = StragglerDetector(window=8, threshold=1.5, patience=2)
+    for step in range(6):
+        for shard in range(4):
+            det.record(shard, 1.0 if shard != 2 else 2.5)
+        stragglers = det.stragglers()
+    assert stragglers == [2]
+    assert det.backup_deadline() > 1.0
+
+
+def test_elastic_rescale_plan():
+    orch = ElasticOrchestrator(total_chips=256, chips_per_node=8,
+                               model_parallel=16)
+    mon = HeartbeatMonitor(num_nodes=32)
+    for n in range(32):
+        mon.beat(n, 0.0)
+    for n in (30, 31):  # two nodes die
+        mon.nodes[n].healthy = False
+    action = orch.plan(mon, step_time_s=1.0)
+    assert action.kind == "rescale"
+    # 240 healthy chips -> largest valid (data pow2) x16 mesh = 128
+    assert action.target_chips == 128
+    assert orch.degraded_mesh_shape(action.target_chips) == {
+        "data": 8, "model": 16}
+
+
+def test_policy_sla_research_trigger():
+    pol = ReconfigurePolicy(sla_violation_patience=2)
+    from repro.core.fitness import UserRequirement
+
+    sla = UserRequirement(max_time_s=1.0)
+    st_bad = ClusterState(healthy_chips=256, total_chips=256,
+                          step_time_s=2.0, sla=sla)
+    assert pol.decide(st_bad).kind == "continue"  # patience 1
+    assert pol.decide(st_bad).kind == "research"  # patience hit
+
+
+def test_checkpoint_elastic_restore_roundtrip(tmp_path):
+    """Save on 'big mesh', restore into the same template (degraded mesh is
+    exercised in the dry-run environment; here we validate the data path)."""
+    ck = Checkpointer(str(tmp_path))
+    cfg = reduced(get_config("stablelm-1.6b"))
+    from repro import models as M
+
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    ck.save(11, params, blocking=True)
+    restored = ck.restore(11, params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
