@@ -6,6 +6,8 @@ Sections:
   ga_*            — GA convergence (paper §4.1.2 params)
   fpga_*          — §3.2 narrowing funnel
   mixed_env_*     — §3.3 staged destination selection
+  fleet_*         — batched fleet sweep: executors, cross-cell cache,
+                    per-cell time/energy Pareto frontiers (Fig.5 generalized)
   roofline_*      — §Roofline summary per dry-run cell (when records exist)
   kernel_*        — kernel micro-benchmarks / TPU projections
   e2e_*           — end-to-end train/serve drivers (reduced configs)
@@ -21,10 +23,11 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 def main() -> None:
     rows: list[tuple] = []
 
-    from benchmarks import ga_bench, himeno_bench, kernel_bench
+    from benchmarks import fleet_bench, ga_bench, himeno_bench, kernel_bench
 
     rows += himeno_bench.run()
     rows += ga_bench.run()
+    rows += fleet_bench.run()
     rows += kernel_bench.run()
 
     # end-to-end drivers (reduced configs, CPU)

@@ -1,33 +1,54 @@
 """The paper's contribution: power-aware automatic offloading.
 
-GA search (ga, genome, fitness) + power/energy models (power) + static
-narrowing (arithmetic_intensity, candidates) + verification environments
-(verifier, lm_cost_model) + mixed-environment selection (device_select) +
-runtime reconfiguration (reconfigure).
+GA search (ga, genome, fitness) + batched evaluation substrate (evaluator:
+EvalEngine, cross-cell EvalCache, serial/thread/vectorized executors) +
+power/energy models (power) + static narrowing (arithmetic_intensity,
+candidates) + verification environments (verifier, lm_cost_model) +
+mixed-environment selection (device_select) + fleet sweeps and time/energy
+Pareto frontiers (offload_search.search_fleet, pareto) + runtime
+reconfiguration (reconfigure).
 """
 from repro.core.fitness import (
     Measurement, TIMEOUT_SECONDS, UserRequirement, fitness,
+)
+from repro.core.evaluator import (
+    CacheStats, EvalCache, EvalEngine, SerialExecutor, ThreadedExecutor,
+    VectorizedExecutor,
 )
 from repro.core.ga import GAConfig, GAResult, run_ga
 from repro.core.genome import Gene, GenomeSpace, binary_space
 from repro.core.power import (
     HardwareSpec, PaperPowerModel, RooflineTerms, TPU_V5E, TpuPowerModel,
 )
-from repro.core.lm_cost_model import Decisions, analyze_cell, measure_cell
+from repro.core.lm_cost_model import (
+    Decisions, analyze_cell, canonical_decisions, cell_cache_key,
+    measure_cell, measure_cell_batch,
+)
+from repro.core.pareto import (
+    ParetoPoint, dominates, fleet_frontier, narrow, pareto_frontier,
+    select_operating_point,
+)
 from repro.core.offload_search import (
-    lm_genome_space, search_himeno, search_lm_cell,
+    CellSpec, FleetCellResult, FleetResult, lm_cell_key, lm_genome_space,
+    search_fleet, search_himeno, search_lm_cell,
 )
 from repro.core.candidates import NarrowingConfig, narrow_and_measure
 from repro.core.device_select import Destination, select_destination
 
 __all__ = [
     "Measurement", "TIMEOUT_SECONDS", "UserRequirement", "fitness",
+    "CacheStats", "EvalCache", "EvalEngine", "SerialExecutor",
+    "ThreadedExecutor", "VectorizedExecutor",
     "GAConfig", "GAResult", "run_ga",
     "Gene", "GenomeSpace", "binary_space",
     "HardwareSpec", "PaperPowerModel", "RooflineTerms", "TPU_V5E",
     "TpuPowerModel",
-    "Decisions", "analyze_cell", "measure_cell",
-    "lm_genome_space", "search_himeno", "search_lm_cell",
+    "Decisions", "analyze_cell", "canonical_decisions", "cell_cache_key",
+    "measure_cell", "measure_cell_batch",
+    "ParetoPoint", "dominates", "fleet_frontier", "narrow",
+    "pareto_frontier", "select_operating_point",
+    "CellSpec", "FleetCellResult", "FleetResult", "lm_cell_key",
+    "lm_genome_space", "search_fleet", "search_himeno", "search_lm_cell",
     "NarrowingConfig", "narrow_and_measure",
     "Destination", "select_destination",
 ]

@@ -4,13 +4,23 @@
   with elitism (best individual copied unchanged), crossover Pc = 0.9,
   mutation Pm = 0.05, timeout → 10 000 s penalty, each distinct pattern
   measured once (verification-environment results are cached).
+
+Evaluation is routed through a pluggable :class:`~repro.core.evaluator.
+EvalEngine`: each generation's genomes are deduplicated against the engine's
+(persistent, possibly cross-cell) cache and the uncached remainder is
+dispatched as one batch to the engine's executor. The default engine (serial
+executor, private cache) reproduces the seed behavior bit-for-bit; results
+are identical for every executor because measurement backends are pure and
+the GA's RNG stream never observes the executor.
 """
 from __future__ import annotations
 
+import itertools
 import random
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Callable, Hashable, Optional
 
+from repro.core.evaluator import EvalEngine
 from repro.core.fitness import Measurement, fitness as fitness_fn
 from repro.core.genome import GenomeSpace
 
@@ -42,6 +52,12 @@ class GAResult:
     cache_hits: int
 
 
+# Anonymous runs each get a unique cell label: two default-keyed run_ga calls
+# sharing one engine must never read each other's cached measurements (their
+# genome tuples can collide across unrelated spaces).
+_ANON_CELLS = itertools.count()
+
+
 def run_ga(
     space: GenomeSpace,
     measure: Callable[[tuple[int, ...]], Measurement],
@@ -49,22 +65,31 @@ def run_ga(
     *,
     seed_genomes: tuple[tuple[int, ...], ...] = (),
     on_generation: Optional[Callable[[int, list[EvalRecord]], None]] = None,
+    engine: Optional[EvalEngine] = None,
+    cell: Optional[str] = None,
+    canonical: Optional[Callable[[tuple[int, ...]], Hashable]] = None,
 ) -> GAResult:
+    """``engine``/``cell``/``canonical`` plug the run into a shared batched
+    evaluation substrate (see evaluator.py); omitted, the run gets a private
+    serial engine with the classic per-run cache. Cross-run cache sharing
+    requires an explicit ``cell`` (or ``canonical``): anonymous runs are
+    keyed uniquely so unrelated searches can share an engine safely."""
     cfg = config or GAConfig()
     rng = random.Random(cfg.seed)
-    cache: dict[tuple[int, ...], Measurement] = {}
+    eng = engine or EvalEngine()
+    if cell is None:
+        cell = f"ga#{next(_ANON_CELLS)}"
     stats = {"evals": 0, "hits": 0}
 
-    def evaluate(g: tuple[int, ...]) -> EvalRecord:
-        if g in cache:
-            stats["hits"] += 1
-            m = cache[g]
-        else:
-            m = measure(g)
-            cache[g] = m
-            stats["evals"] += 1
-        return EvalRecord(g, m, fitness_fn(
-            m, time_exp=cfg.time_exp, energy_exp=cfg.energy_exp))
+    def evaluate_generation(pop: list[tuple[int, ...]]) -> list[EvalRecord]:
+        ms, evals, hits = eng.evaluate(cell, pop, measure, canonical=canonical)
+        stats["evals"] += evals
+        stats["hits"] += hits
+        return [
+            EvalRecord(g, m, fitness_fn(
+                m, time_exp=cfg.time_exp, energy_exp=cfg.energy_exp))
+            for g, m in zip(pop, ms)
+        ]
 
     # --- initial population --------------------------------------------------
     pop: list[tuple[int, ...]] = list(seed_genomes)[: cfg.population]
@@ -79,7 +104,7 @@ def run_ga(
     best: Optional[EvalRecord] = None
 
     for gen in range(cfg.generations):
-        records = [evaluate(g) for g in pop]
+        records = evaluate_generation(pop)
         records.sort(key=lambda r: r.fitness, reverse=True)
         history.append(records)
         if best is None or records[0].fitness > best.fitness:

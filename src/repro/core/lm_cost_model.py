@@ -10,8 +10,9 @@ chip count.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional
+import functools
+from dataclasses import dataclass, field, replace
+from typing import NamedTuple, Optional, Sequence
 
 from repro.configs.base import ArchConfig, ShapeSpec
 from repro.core.arithmetic_intensity import lm_unit_costs
@@ -20,6 +21,29 @@ from repro.core.power import HardwareSpec, RooflineTerms, TPU_V5E, TpuPowerModel
 
 BF16 = 2.0
 F32 = 4.0
+
+
+class CellInvariants(NamedTuple):
+    """Decision-independent per-cell totals, shared across a whole GA batch
+    (the expensive part of the analytic model is the unit-cost walk; a
+    generation of genomes reuses one walk via the lru_cache below)."""
+
+    fwd_flops: float      # forward FLOPs, all units
+    attn_flops: float     # forward FLOPs of attention units only
+    unit_bytes: float     # HBM bytes, all units (params + activations)
+    kv_cache_bytes: float
+
+
+@functools.lru_cache(maxsize=4096)
+def cell_invariants(cfg: ArchConfig, shape: ShapeSpec) -> CellInvariants:
+    units = lm_unit_costs(cfg, shape)
+    return CellInvariants(
+        fwd_flops=sum(u.total_flops for u in units),
+        attn_flops=sum(u.total_flops for u in units if "attention" in u.name),
+        unit_bytes=sum(u.total_bytes for u in units),
+        kv_cache_bytes=(_kv_cache_bytes(cfg, shape)
+                        if shape.kind == "decode" else 0.0),
+    )
 
 
 @dataclass(frozen=True)
@@ -34,6 +58,12 @@ class Decisions:
     matmul_precision: str = "bf16"  # bf16 | f32_accum
     expert_parallel: str = "tp"    # tp (expert-TP) — see DESIGN.md §5
     seq_shard_decode: bool = True  # shard KV seq over model axis at decode
+    clock: float = 1.0             # DVFS core-clock fraction (1.0 = nominal)
+    # clock < 1 stretches compute time by 1/f but scales MXU dynamic power by
+    # ~f^3 (P ∝ f·V², V ∝ f), so MXU *energy* falls by ~f² while idle energy
+    # grows with the longer step — the time-vs-energy tradeoff the paper's
+    # power-reduction objective actually navigates. HBM/ICI clocks are
+    # independent domains and stay nominal.
 
 
 @dataclass
@@ -64,17 +94,16 @@ def analyze_cell(
     pod, data, model = _mesh_sizes(mesh_shape)
     chips = pod * data * model
     dp = pod * data
-    units = lm_unit_costs(cfg, shape)
+    inv = cell_invariants(cfg, shape)
     tokens = shape.tokens()
     train = shape.kind == "train"
     accum = dec.accum or cfg.accum
 
     # ---------------- FLOPs ----------------
-    fwd = sum(u.total_flops for u in units)
+    fwd = inv.fwd_flops
     if dec.attn_impl == "xla" and not cfg.sliding_window and shape.kind != "decode":
         # masked full attention computes the upper triangle too (2x sdpa)
-        attn_extra = sum(u.total_flops for u in units if "attention" in u.name)
-        fwd = fwd + attn_extra  # sdpa is ~the whole attention unit at long ctx
+        fwd = fwd + inv.attn_flops  # sdpa is ~the whole attention unit at long ctx
     flops = fwd * (3.0 if train else 1.0)
     if train:
         refwd = {"none": 0.0, "dots": 0.35, "full": 1.0}[dec.remat]
@@ -83,17 +112,14 @@ def analyze_cell(
     if dec.matmul_precision == "f32_accum":
         flops *= 1.0  # same MACs; throughput penalty applied below
     eff_peak = hw.peak_flops * (0.5 if dec.matmul_precision == "f32_accum" else 1.0)
+    eff_peak *= dec.clock  # DVFS: compute throughput scales with core clock
 
-    # head-replication waste: if heads don't divide the model axis the
-    # baseline layout replicates attention compute across it.
-    if cfg.num_heads and cfg.num_heads % model and shape.kind != "decode":
-        attn_total = sum(u.total_flops for u in units if "attention" in u.name)
-        mult = 3.0 if train else 1.0
-        flops += attn_total * mult * (model - 1) / model * 0  # tracked in HLO probe
+    # Head-replication waste (heads not dividing the model axis) is tracked
+    # only by the HLO probe; the analytic model deliberately excludes it.
 
     # ---------------- HBM bytes ----------------
     p_bytes = cfg.param_count() * BF16
-    act_bytes = sum(u.total_bytes for u in units) - p_bytes  # activation streams
+    act_bytes = inv.unit_bytes - p_bytes  # activation streams
     act_bytes = max(act_bytes, 0.0)
     hbm = p_bytes + act_bytes
     if train:
@@ -102,9 +128,8 @@ def analyze_cell(
         hbm = p_bytes * accum + act_bytes * 2.5 + opt_bytes
         if dec.remat == "full":
             hbm += act_bytes  # recompute re-reads
-    kv_cache_bytes = 0.0
+    kv_cache_bytes = inv.kv_cache_bytes
     if shape.kind == "decode":
-        kv_cache_bytes = _kv_cache_bytes(cfg, shape)
         hbm += kv_cache_bytes  # read whole cache once per step (+ small write)
 
     # ---------------- collective bytes (wire, total) ----------------
@@ -149,6 +174,10 @@ def analyze_cell(
                           chips=chips,
                           hw=HardwareSpec(hw.name, eff_peak, hw.hbm_bw,
                                           hw.ici_bw, hw.hbm_bytes, hw.vmem_bytes))
+    if dec.clock != 1.0:
+        # dynamic MXU power ∝ f·V² with V ∝ f; active time already stretched
+        # by 1/f through eff_peak, so MXU energy nets out to ~f².
+        power = replace(power, p_mxu=power.p_mxu * dec.clock ** 3)
     t = terms.step_time(overlap=dec.overlap)
     e = terms.energy(power, overlap=dec.overlap)
     return CellCost(
@@ -189,3 +218,42 @@ def measure_cell(cfg: ArchConfig, shape: ShapeSpec, mesh_shape: dict[str, int],
                        avg_watts=cost.energy / max(cost.step_time, 1e-12)
                        / cost.terms.chips,
                        detail=cost.breakdown)
+
+
+# ---------------------------------------------------------------------------
+# Batched-evaluation hooks (EvalEngine substrate; see core/evaluator.py)
+# ---------------------------------------------------------------------------
+
+
+def canonical_decisions(cfg: ArchConfig, dec: Decisions) -> Decisions:
+    """Resolve config-dependent defaults so two genomes (or a genome and the
+    paper-faithful baseline ``Decisions()``) that execute identically hash to
+    the same cache entry. Today only ``accum=0 -> cfg.accum`` resolves."""
+    return replace(dec, accum=dec.accum or cfg.accum)
+
+
+def cell_cache_key(cfg: ArchConfig, shape: ShapeSpec,
+                   mesh_shape: dict[str, int], dec: Decisions,
+                   power: TpuPowerModel = TpuPowerModel()):
+    """Semantic cross-cell cache key: exactly the inputs that determine
+    ``measure_cell``'s output, with decisions canonicalized. Two fleet cells
+    sharing (arch, shape, mesh, power) — e.g. multi-start GA restarts —
+    share every measurement through this key."""
+    return ("lm_cell", cfg, shape, tuple(sorted(mesh_shape.items())),
+            canonical_decisions(cfg, dec), power)
+
+
+def measure_cell_batch(cfg: ArchConfig, shape: ShapeSpec,
+                       mesh_shape: dict[str, int],
+                       decs: Sequence[Decisions],
+                       power: TpuPowerModel = TpuPowerModel()
+                       ) -> list[Measurement]:
+    """Bulk-measure hook for ``VectorizedExecutor``: one dispatch per GA
+    generation. Today this is the same per-decision arithmetic as
+    ``measure_cell`` (the shared unit-cost walk is lru-cached either way),
+    so batched and serial evaluation are bit-identical and roughly
+    equally fast — the value of the hook is the *batch boundary* itself,
+    the extension point where a numpy-vectorized model or a remote
+    bulk-measurement API plugs in without touching the GA or engine."""
+    return [measure_cell(cfg, shape, mesh_shape, d, power=power)
+            for d in decs]

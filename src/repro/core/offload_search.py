@@ -1,4 +1,4 @@
-"""GPU-path GA offload search drivers (paper §3.1) for both workloads.
+"""GPU-path GA offload search drivers for both workloads, plus fleet search.
 
 * ``search_himeno`` — the paper's literal experiment: 13-bit genome over
   loop statements, measured or calibrated backend.
@@ -6,17 +6,37 @@
   decisions for an (arch × shape × mesh) cell, scored by the analytic
   verification environment (the compile-backed verifier confirms winners —
   the FPGA-path split of cheap-iterate vs expensive-confirm).
+* ``search_fleet`` — many cells swept concurrently through one
+  :class:`~repro.core.evaluator.EvalEngine`, sharing its cross-cell
+  measurement cache; per-cell and fleet-wide time/energy Pareto frontiers
+  come back alongside the GA winners (see core/pareto.py). This is the
+  many-applications/many-placements regime the paper's follow-ups
+  (arXiv:2110.11520, arXiv:2011.12431) evaluate, one sweep per call.
+
+Per-cell results are executor- and concurrency-independent: every cell's GA
+runs its own deterministic RNG stream and every measurement backend is a pure
+function of the genome, so a thread-pool fleet sweep returns bit-identical
+best genomes to a serial sweep — only wall time and cache-hit accounting
+differ.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
-from typing import Callable, Optional
+import itertools
+import time
+from concurrent.futures import ThreadPoolExecutor as _FuturesPool
+from dataclasses import dataclass, field, replace
+from typing import Callable, Optional, Sequence, Union
 
 from repro.configs.base import ArchConfig, ShapeSpec
-from repro.core.fitness import Measurement
+from repro.core.evaluator import CacheStats, EvalEngine, VectorizedExecutor
+from repro.core.fitness import Measurement, UserRequirement
 from repro.core.ga import GAConfig, GAResult, run_ga
 from repro.core.genome import Gene, GenomeSpace, binary_space
-from repro.core.lm_cost_model import Decisions, measure_cell
+from repro.core.lm_cost_model import (
+    Decisions, cell_cache_key, measure_cell, measure_cell_batch,
+)
+from repro.core.pareto import ParetoPoint, fleet_frontier, pareto_frontier, \
+    select_operating_point
 from repro.core.power import TpuPowerModel
 
 
@@ -56,6 +76,9 @@ def lm_genome_space(cfg: ArchConfig, shape: ShapeSpec) -> GenomeSpace:
         genes.append(Gene("seq_shard_decode", (True, False)))
     genes.append(Gene("overlap", (True, False)))
     genes.append(Gene("matmul_precision", ("bf16", "f32_accum")))
+    # DVFS power knob (paper's objective is Watt·s, not speed): down-clocking
+    # trades step time for MXU energy, populating the Pareto frontier.
+    genes.append(Gene("clock", (1.0, 0.85, 0.7)))
     return GenomeSpace(tuple(genes))
 
 
@@ -66,12 +89,28 @@ def decisions_from(space: GenomeSpace, genome: tuple[int, ...],
     return replace(base, **{k: v for k, v in assignment.items() if k in known})
 
 
+def lm_cell_key(cfg: ArchConfig, shape: ShapeSpec,
+                mesh_shape: dict[str, int], seed: int = 0) -> str:
+    mesh = "x".join(f"{k}{v}" for k, v in sorted(mesh_shape.items()))
+    key = f"{cfg.name}/{shape.name}/{mesh}"
+    return f"{key}#s{seed}" if seed else key
+
+
+# Custom-backend searches get unique auto-derived cell labels: two backends
+# measuring the same (arch, shape, mesh) on a shared engine must never serve
+# each other's cached results. Cross-run sharing for a custom backend is an
+# explicit opt-in via the ``cell`` parameter.
+_CUSTOM_BACKEND_CELLS = itertools.count()
+
+
 @dataclass
 class LmSearchResult:
     ga: GAResult
     space: GenomeSpace
     best_decisions: Decisions
     baseline: Measurement  # paper-faithful defaults, for §Perf comparison
+    frontier: list[ParetoPoint] = field(default_factory=list)
+    cell: str = ""
 
 
 def search_lm_cell(
@@ -81,21 +120,180 @@ def search_lm_cell(
     ga_config: Optional[GAConfig] = None,
     measure: Optional[Callable[[Decisions], Measurement]] = None,
     power: TpuPowerModel = TpuPowerModel(),
+    *,
+    engine: Optional[EvalEngine] = None,
+    cell: Optional[str] = None,
+    ga_seed: int = 0,
 ) -> LmSearchResult:
+    """One cell's GA search. Pass a shared ``engine`` to join a fleet-wide
+    measurement cache; ``ga_seed`` offsets the GA's RNG (multi-start restarts
+    of the same cell share every measurement through the semantic cache
+    key). The returned frontier covers every runnable pattern this search
+    measured, baseline included."""
     space = lm_genome_space(cfg, shape)
+    analytic = measure is None
     measure = measure or (lambda dec: measure_cell(cfg, shape, mesh_shape, dec,
                                                    power=power))
 
     def measure_bits(genome: tuple[int, ...]) -> Measurement:
         return measure(decisions_from(space, genome))
 
+    canonical = None
+    if analytic:
+        # semantic keying: distinct genomes (or cells) with identical
+        # resolved execution decisions share one cache entry
+        canonical = lambda g: cell_cache_key(  # noqa: E731
+            cfg, shape, mesh_shape, decisions_from(space, g), power)
+        measure_bits.batch = lambda genomes: measure_cell_batch(
+            cfg, shape, mesh_shape,
+            [decisions_from(space, g) for g in genomes], power=power)
+
+    if cell is None:
+        cell = lm_cell_key(cfg, shape, mesh_shape, seed=ga_seed)
+        if not analytic:
+            cell = f"{cell}@backend{next(_CUSTOM_BACKEND_CELLS)}"
+    eng = engine or EvalEngine()
     n = len(space.genes)
     ga_cfg = ga_config or GAConfig(population=min(12, max(4, n * 2)),
                                    generations=min(12, max(4, n * 2)))
-    baseline = measure(Decisions())
-    result = run_ga(space, measure_bits, ga_cfg,
-                    seed_genomes=(space.encode({}),))
+    if ga_seed:
+        ga_cfg = replace(ga_cfg, seed=ga_cfg.seed + ga_seed)
+
+    zero = space.encode({})
+    if analytic:
+        # paper-faithful baseline, routed through the engine: it shares its
+        # cache entry with the GA's all-defaults seed genome
+        [baseline], _, _ = eng.evaluate(cell, [zero], measure_bits,
+                                        canonical=canonical)
+    else:
+        baseline = measure(Decisions())
+    result = run_ga(space, measure_bits, ga_cfg, seed_genomes=(zero,),
+                    engine=eng, cell=cell, canonical=canonical)
+
+    by_genome: dict[tuple[int, ...], Measurement] = {zero: baseline}
+    for gen in result.history:
+        for r in gen:
+            by_genome.setdefault(r.genome, r.measurement)
+    frontier = pareto_frontier(
+        ParetoPoint(g, m, cell) for g, m in by_genome.items())
     return LmSearchResult(
         ga=result, space=space,
         best_decisions=decisions_from(space, result.best.genome),
-        baseline=baseline)
+        baseline=baseline, frontier=frontier, cell=cell)
+
+
+# ---------------------------------------------------------------------------
+# Fleet search (many cells, one shared evaluation substrate)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CellSpec:
+    """One fleet cell: (arch × shape × mesh), plus a GA restart seed so a
+    fleet can include multi-start searches of the same cell (restarts share
+    all measurements through the semantic cache)."""
+
+    arch: str
+    shape: ShapeSpec
+    mesh: tuple[tuple[str, int], ...]  # sorted (axis, size) items
+    seed: int = 0
+
+    @staticmethod
+    def create(arch: str, shape: Union[str, ShapeSpec],
+               mesh_shape: dict[str, int], seed: int = 0) -> "CellSpec":
+        if isinstance(shape, str):
+            from repro.configs import SHAPES
+            shape = SHAPES[shape]
+        return CellSpec(arch, shape, tuple(sorted(mesh_shape.items())), seed)
+
+    @property
+    def mesh_shape(self) -> dict[str, int]:
+        return dict(self.mesh)
+
+    @property
+    def key(self) -> str:
+        from repro.configs import get_config
+        return lm_cell_key(get_config(self.arch), self.shape, self.mesh_shape,
+                           seed=self.seed)
+
+
+@dataclass
+class FleetCellResult:
+    spec: CellSpec
+    cell: str
+    search: LmSearchResult
+    operating_point: Optional[ParetoPoint]
+    wall_s: float
+
+
+@dataclass
+class FleetResult:
+    cells: list[FleetCellResult]  # input order
+    frontier: list[ParetoPoint]  # fleet-wide non-dominated placements
+    cache: CacheStats  # this sweep's shared-cache traffic (delta)
+    evaluations: int  # distinct measurements actually performed
+    cache_hits: int
+    wall_s: float
+
+    @property
+    def cache_hit_rate(self) -> float:
+        return self.cache.hit_rate
+
+
+def search_fleet(
+    cells: Sequence[CellSpec],
+    *,
+    ga_config: Optional[GAConfig] = None,
+    engine: Optional[EvalEngine] = None,
+    cell_workers: int = 4,
+    requirement: Optional[UserRequirement] = None,
+    power: TpuPowerModel = TpuPowerModel(),
+) -> FleetResult:
+    """Sweep many (arch × shape × mesh) cells concurrently.
+
+    All cells evaluate through one shared ``engine`` (default: vectorized
+    batches into a fresh cross-cell cache — right for the µs-cheap analytic
+    backend, where a thread pool would only add GIL overhead; pass a
+    ``ThreadedExecutor`` engine for blocking verifier backends, or a
+    persistent engine to keep measurements across sweeps). ``cell_workers``
+    > 1 runs whole cells concurrently on top of the engine's
+    intra-generation batching; ``requirement`` narrows each cell's frontier
+    to a preferred operating point (lowest energy satisfying the
+    requirement, the paper's §3.3 flow).
+    """
+    from repro.configs import get_config
+
+    eng = engine or EvalEngine(executor=VectorizedExecutor())
+    stats_before = eng.cache.stats()
+    t_start = time.perf_counter()
+
+    def run_cell(spec: CellSpec) -> FleetCellResult:
+        t0 = time.perf_counter()
+        cfg = get_config(spec.arch)
+        res = search_lm_cell(cfg, spec.shape, spec.mesh_shape, ga_config,
+                             power=power, engine=eng, ga_seed=spec.seed)
+        req = requirement
+        if req is not None and req.min_speedup is not None \
+                and req.baseline_time_s is None:
+            # speedup is relative to *this cell's* baseline (§3.3): a fleet
+            # spans step times orders of magnitude apart, so a single
+            # fleet-wide baseline would be wrong for every cell but one
+            req = replace(req, baseline_time_s=res.baseline.time_s)
+        op = select_operating_point(res.frontier, req)
+        return FleetCellResult(spec, res.cell, res, op,
+                               time.perf_counter() - t0)
+
+    if cell_workers > 1 and len(cells) > 1:
+        with _FuturesPool(max_workers=min(cell_workers, len(cells))) as pool:
+            results = list(pool.map(run_cell, cells))
+    else:
+        results = [run_cell(c) for c in cells]
+
+    delta = eng.cache.stats().since(stats_before)
+    return FleetResult(
+        cells=results,
+        frontier=fleet_frontier(r.search.frontier for r in results),
+        cache=delta,
+        evaluations=delta.inserts,
+        cache_hits=delta.hits,
+        wall_s=time.perf_counter() - t_start)

@@ -1,0 +1,111 @@
+"""Time-vs-energy Pareto frontiers over verification-environment measurements.
+
+The paper's Fig.5 compares a *single* operating point (the GA winner's
+Watt·seconds) against the CPU-only baseline. A fleet sweep produces many
+measured patterns per cell; the natural generalization is the non-dominated
+frontier in the (processing time, energy) plane: every point on it is a
+defensible operating choice, and ``UserRequirement`` (§3.3) narrows the
+frontier to the points a user would accept — then one is picked by policy
+(lowest energy, lowest time, or the paper's fitness).
+
+Timed-out and infeasible measurements never enter a frontier: the paper's
+10 000 s penalty exists to steer the GA, not to describe a runnable
+operating point.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, Optional, Sequence
+
+from repro.core.fitness import Measurement, UserRequirement, fitness
+
+
+@dataclass(frozen=True)
+class ParetoPoint:
+    """One measured operating point; ``cell`` labels its fleet cell."""
+
+    genome: tuple[int, ...]
+    measurement: Measurement
+    cell: str = ""
+
+    @property
+    def time_s(self) -> float:
+        return self.measurement.time_s
+
+    @property
+    def energy_ws(self) -> float:
+        return self.measurement.energy_ws
+
+    @property
+    def fitness(self) -> float:
+        return fitness(self.measurement)
+
+
+def dominates(a: Measurement, b: Measurement) -> bool:
+    """True iff ``a`` is no worse than ``b`` in both time and energy and
+    strictly better in at least one (minimization)."""
+    return (a.time_s <= b.time_s and a.energy_ws <= b.energy_ws
+            and (a.time_s < b.time_s or a.energy_ws < b.energy_ws))
+
+
+def _runnable(p: ParetoPoint) -> bool:
+    m = p.measurement
+    return m.feasible and not m.timed_out
+
+
+def pareto_frontier(points: Iterable[ParetoPoint]) -> list[ParetoPoint]:
+    """Non-dominated subset, sorted by ascending time (descending energy).
+
+    Coordinate duplicates keep one representative (the first encountered at
+    that (time, energy)); penalized measurements are excluded entirely.
+    """
+    candidates = [p for p in points if _runnable(p)]
+    # Stable sort by (time, energy): a sweep keeping strictly-decreasing
+    # energy then yields exactly the non-dominated set (ties and weakly
+    # dominated points fall out because their energy is not an improvement).
+    candidates.sort(key=lambda p: (p.time_s, p.energy_ws))
+    frontier: list[ParetoPoint] = []
+    best_energy = float("inf")
+    for p in candidates:
+        if p.energy_ws < best_energy:
+            frontier.append(p)
+            best_energy = p.energy_ws
+    return frontier
+
+
+def fleet_frontier(cell_frontiers: Iterable[Sequence[ParetoPoint]]
+                   ) -> list[ParetoPoint]:
+    """Fleet-wide frontier across cells (points keep their cell labels):
+    which (cell, pattern) placements are globally non-dominated — the paper's
+    mixed-destination comparison (arXiv:2011.12431) as a frontier."""
+    merged: list[ParetoPoint] = []
+    for f in cell_frontiers:
+        merged.extend(f)
+    return pareto_frontier(merged)
+
+
+def narrow(points: Iterable[ParetoPoint], req: Optional[UserRequirement]
+           ) -> list[ParetoPoint]:
+    """§3.3 narrowing: keep the points satisfying the user requirement."""
+    if req is None:
+        return list(points)
+    return [p for p in points if req.satisfied(p.measurement)]
+
+
+def select_operating_point(
+    points: Iterable[ParetoPoint],
+    req: Optional[UserRequirement] = None,
+    prefer: str = "energy",
+) -> Optional[ParetoPoint]:
+    """Pick one frontier point: the requirement filters, ``prefer`` decides
+    among survivors ("energy" | "time" | "fitness"). None when nothing
+    runnable satisfies the requirement — the caller's cue to relax it or
+    fall back to the CPU baseline, as the paper's staged flow does."""
+    surviving = narrow(pareto_frontier(points), req)
+    if not surviving:
+        return None
+    if prefer == "time":
+        return min(surviving, key=lambda p: (p.time_s, p.energy_ws))
+    if prefer == "fitness":
+        return max(surviving, key=lambda p: p.fitness)
+    return min(surviving, key=lambda p: (p.energy_ws, p.time_s))

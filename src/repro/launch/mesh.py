@@ -3,25 +3,37 @@
 A FUNCTION (not a module-level constant) so importing this module never
 touches jax device state. Single pod: 16×16 = 256 chips (data, model);
 multi-pod: 2×16×16 = 512 chips (pod, data, model).
+
+``make_mesh_compat`` papers over the jax API drift around explicit axis
+types: jax ≥ 0.6 takes ``axis_types=(AxisType.Auto, ...)``, older releases
+(the 0.4.x line in this container) take no such kwarg and treat every axis
+as auto. All mesh construction in src/ and tests/ goes through it.
 """
 from __future__ import annotations
 
 import jax
 
 
+def make_mesh_compat(shape, axes):
+    """jax.make_mesh across jax versions (Auto axis types when supported)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_mesh_from_shape(mesh_shape: dict[str, int]):
     """Arbitrary (possibly degraded) mesh, e.g. after elastic rescale."""
     names = tuple(n for n in ("pod", "data", "model") if n in mesh_shape)
     shape = tuple(mesh_shape[n] for n in names)
-    return jax.make_mesh(
-        shape, names, axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+    return make_mesh_compat(shape, names)
 
 
 def mesh_shape_dict(mesh) -> dict[str, int]:

@@ -105,7 +105,10 @@ def use_mesh(mesh: Optional[Mesh], rules: Optional[ShardingRules] = None):
     _CTX.mesh, _CTX.rules = mesh, rules
     try:
         if mesh is not None:
-            with jax.set_mesh(mesh):
+            set_mesh = getattr(jax, "set_mesh", None)
+            # jax < 0.6: no ambient-mesh setter; entering the Mesh context
+            # gives the same named-axis environment to lowered programs.
+            with (set_mesh(mesh) if set_mesh is not None else mesh):
                 yield
         else:
             yield

@@ -1,0 +1,81 @@
+"""Hypothesis compatibility shim: property tests degrade gracefully.
+
+``from _hypothesis_compat import given, settings, st`` re-exports the real
+hypothesis when it is installed. When it is not (this container ships only
+jax + pytest), a minimal fallback runs each ``@given`` test over a small
+deterministic grid of boundary examples instead of skipping it: the suite
+collects and passes everywhere, with reduced (but nonzero) property
+coverage. CI installs hypothesis, so the full strategies still run there.
+
+The fallback supports exactly the strategy surface this suite uses:
+``st.floats(lo, hi)``, ``st.integers(lo, hi)``, ``st.sampled_from(seq)``.
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+
+try:  # real hypothesis when available
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic boundary-grid fallback
+    HAVE_HYPOTHESIS = False
+
+    class _Examples:
+        """A 'strategy' that is just a short list of boundary examples."""
+
+        def __init__(self, examples):
+            self.examples = list(examples)
+
+    class _St:
+        @staticmethod
+        def floats(min_value, max_value):
+            mid = min_value + (max_value - min_value) / 3.0
+            return _Examples([min_value, mid, max_value])
+
+        @staticmethod
+        def integers(min_value, max_value):
+            mid = min_value + (max_value - min_value) // 3
+            vals = dict.fromkeys([min_value, mid, max_value])
+            return _Examples(vals)
+
+        @staticmethod
+        def sampled_from(seq):
+            return _Examples(seq)
+
+    st = _St()
+
+    def given(*arg_strategies, **kw_strategies):
+        def decorate(fn):
+            import inspect
+
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            # positional strategies bind to the test's leading parameters
+            pos_names = [p.name for p in params[: len(arg_strategies)]]
+            bound = set(pos_names) | set(kw_strategies)
+            names = list(kw_strategies)
+            grids = ([s.examples for s in arg_strategies]
+                     + [kw_strategies[n].examples for n in names])
+
+            @functools.wraps(fn)
+            def wrapper(**fixtures):
+                for combo in itertools.product(*grids):
+                    call_kw = dict(zip(pos_names, combo[: len(pos_names)]))
+                    call_kw.update(zip(names, combo[len(pos_names):]))
+                    fn(**fixtures, **call_kw)
+
+            # hide the strategy-bound parameters from pytest's fixture
+            # resolution; any remaining parameters stay real fixtures
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for p in params if p.name not in bound])
+            return wrapper
+
+        return decorate
+
+    def settings(*_args, **_kwargs):
+        def decorate(fn):
+            return fn
+
+        return decorate

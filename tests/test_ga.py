@@ -3,7 +3,7 @@ import math
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.fitness import Measurement, TIMEOUT_SECONDS, UserRequirement, fitness
 from repro.core.ga import GAConfig, run_ga

@@ -1,0 +1,118 @@
+"""Pareto frontier correctness on hand-built Measurement sets."""
+import pytest
+
+from repro.core.fitness import Measurement, UserRequirement
+from repro.core.pareto import (
+    ParetoPoint, dominates, fleet_frontier, narrow, pareto_frontier,
+    select_operating_point,
+)
+
+
+def _pt(g, t, e, cell="c", **kw):
+    return ParetoPoint((g,), Measurement(time_s=t, energy_ws=e, **kw), cell)
+
+
+# ---------------------------------------------------------------------------
+# Dominance
+# ---------------------------------------------------------------------------
+
+
+def test_dominates_strict_and_weak():
+    a = Measurement(time_s=1.0, energy_ws=10.0)
+    b = Measurement(time_s=2.0, energy_ws=20.0)
+    assert dominates(a, b)
+    assert not dominates(b, a)
+    # equal in both: neither dominates
+    assert not dominates(a, Measurement(time_s=1.0, energy_ws=10.0))
+    # better in one, equal in the other: dominates
+    assert dominates(a, Measurement(time_s=1.0, energy_ws=11.0))
+    # incomparable (faster but hungrier): neither dominates
+    c = Measurement(time_s=0.5, energy_ws=30.0)
+    assert not dominates(a, c) and not dominates(c, a)
+
+
+# ---------------------------------------------------------------------------
+# Frontier construction
+# ---------------------------------------------------------------------------
+
+
+def test_frontier_keeps_only_nondominated():
+    pts = [
+        _pt(0, 1.0, 100.0),   # fastest
+        _pt(1, 2.0, 50.0),    # middle tradeoff
+        _pt(2, 4.0, 20.0),    # lowest energy
+        _pt(3, 3.0, 60.0),    # dominated by (1)
+        _pt(4, 1.5, 120.0),   # dominated by (0)
+    ]
+    front = pareto_frontier(pts)
+    assert [p.genome for p in front] == [(0,), (1,), (2,)]
+    # sorted by ascending time, strictly descending energy
+    times = [p.time_s for p in front]
+    energies = [p.energy_ws for p in front]
+    assert times == sorted(times)
+    assert energies == sorted(energies, reverse=True)
+
+
+def test_frontier_excludes_timeouts_and_infeasible():
+    pts = [
+        _pt(0, 2.0, 50.0),
+        # penalized patterns have tiny *raw* coordinates but must not enter
+        _pt(1, 0.1, 1.0, timed_out=True),
+        _pt(2, 0.1, 1.0, feasible=False),
+    ]
+    front = pareto_frontier(pts)
+    assert [p.genome for p in front] == [(0,)]
+
+
+def test_frontier_dedupes_equal_coordinates():
+    pts = [_pt(0, 1.0, 10.0), _pt(1, 1.0, 10.0), _pt(2, 1.0, 12.0)]
+    front = pareto_frontier(pts)
+    assert len(front) == 1 and front[0].genome == (0,)  # first wins
+
+
+def test_frontier_empty_when_nothing_runnable():
+    assert pareto_frontier([_pt(0, 1.0, 1.0, timed_out=True)]) == []
+
+
+def test_fleet_frontier_merges_and_keeps_cell_labels():
+    cell_a = [_pt(0, 1.0, 100.0, cell="a"), _pt(1, 3.0, 40.0, cell="a")]
+    cell_b = [_pt(2, 2.0, 50.0, cell="b"), _pt(3, 5.0, 90.0, cell="b")]
+    front = fleet_frontier([cell_a, cell_b])
+    assert [(p.cell, p.genome) for p in front] == [
+        ("a", (0,)), ("b", (2,)), ("a", (1,))]
+
+
+# ---------------------------------------------------------------------------
+# UserRequirement narrowing + operating-point selection
+# ---------------------------------------------------------------------------
+
+
+def test_narrow_filters_by_requirement():
+    pts = [_pt(0, 1.0, 100.0), _pt(1, 3.0, 40.0)]
+    req = UserRequirement(max_time_s=2.0)
+    assert [p.genome for p in narrow(pts, req)] == [(0,)]
+    assert narrow(pts, None) == pts
+
+
+def test_select_operating_point_prefers():
+    pts = [_pt(0, 1.0, 100.0), _pt(1, 2.0, 50.0), _pt(2, 4.0, 20.0)]
+    assert select_operating_point(pts).genome == (2,)  # default: min energy
+    assert select_operating_point(pts, prefer="time").genome == (0,)
+    best_fit = select_operating_point(pts, prefer="fitness")
+    assert best_fit.genome == min(
+        pts, key=lambda p: p.time_s * p.energy_ws).genome
+
+
+def test_select_operating_point_respects_requirement():
+    pts = [_pt(0, 1.0, 100.0), _pt(1, 2.0, 50.0), _pt(2, 4.0, 20.0)]
+    req = UserRequirement(max_time_s=3.0)
+    assert select_operating_point(pts, req).genome == (1,)
+    # nothing satisfies: None (caller falls back / relaxes, §3.3)
+    assert select_operating_point(pts, UserRequirement(max_time_s=0.5)) is None
+
+
+def test_select_operating_point_ignores_dominated_points():
+    # a dominated point satisfying the requirement must not be chosen
+    pts = [_pt(0, 1.0, 30.0), _pt(1, 1.5, 100.0)]
+    req = UserRequirement(max_time_s=2.0)
+    assert select_operating_point(pts, req).genome == (0,)

@@ -16,10 +16,10 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import json
     import jax, jax.numpy as jnp
+    from repro.launch.mesh import make_mesh_compat
     from repro.parallel.pipeline import pipeline_apply
 
-    mesh = jax.make_mesh((4,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh_compat((4,), ("stage",))
     S, M, mb, d = 4, 8, 2, 16
     key = jax.random.PRNGKey(0)
     w = jax.random.normal(key, (S, d, d)) * 0.3
@@ -59,10 +59,12 @@ def pp_result():
     return json.loads(proc.stdout.strip().splitlines()[-1])
 
 
+@pytest.mark.slow
 def test_pipeline_forward_matches_sequential(pp_result):
     assert pp_result["fwd_err"] < 1e-5
 
 
+@pytest.mark.slow
 def test_pipeline_backward_matches_sequential(pp_result):
     assert pp_result["bwd_err"] < 1e-4
 

@@ -1,6 +1,6 @@
 """Power models, roofline terms, FPGA-path narrowing, mixed-env selection."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.arithmetic_intensity import himeno_unit_costs, lm_unit_costs
 from repro.core.candidates import NarrowingConfig, narrow_and_measure
@@ -59,6 +59,73 @@ def test_energy_overlap_saves_idle_only():
     e_overlap = terms.energy(pm, overlap=True)
     e_seq = terms.energy(pm, overlap=False)
     assert e_seq - e_overlap == pytest.approx(pm.p_idle * 1.0, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Power-model invariants (property checks)
+# ---------------------------------------------------------------------------
+
+
+@given(f=st.floats(0.0, 4e15), b=st.floats(0.0, 4e12), c=st.floats(0.0, 1e12),
+       chips=st.sampled_from([1, 8, 256]))
+@settings(max_examples=40, deadline=None)
+def test_tpu_energy_at_least_idle_floor(f, b, c, chips):
+    """energy ≥ p_idle · t_step · chips: a slice can never spend less than
+    its idle floor over the wall clock, overlapped or not."""
+    pm = TpuPowerModel()
+    terms = RooflineTerms(flops=f, hbm_bytes=b, collective_bytes=c,
+                          chips=chips)
+    for overlap in (True, False):
+        t = terms.step_time(overlap)
+        assert terms.energy(pm, overlap) >= pm.p_idle * t * chips - 1e-9
+
+
+@given(f=st.floats(1e9, 4e15), b=st.floats(1e6, 4e12), c=st.floats(0.0, 1e12))
+@settings(max_examples=40, deadline=None)
+def test_step_time_overlap_never_slower(f, b, c):
+    """max(terms) ≤ sum(terms): overlapping components can only help, and the
+    no-overlap step is bounded by 3× the overlapped one."""
+    terms = RooflineTerms(flops=f, hbm_bytes=b, collective_bytes=c, chips=8)
+    t_ov, t_seq = terms.step_time(True), terms.step_time(False)
+    assert t_ov <= t_seq <= 3.0 * t_ov
+
+
+@given(t=st.floats(0.01, 1e4), e=st.floats(0.01, 1e7),
+       scale=st.sampled_from([1.5, 4.0, 100.0]))
+@settings(max_examples=40, deadline=None)
+def test_fitness_monotone_in_time_and_energy(t, e, scale):
+    """The paper's fitness must strictly prefer faster and lower-energy
+    measurements, independently in each objective."""
+    from repro.core.fitness import fitness
+
+    base = fitness(Measurement(time_s=t, energy_ws=e))
+    assert fitness(Measurement(time_s=t * scale, energy_ws=e)) < base
+    assert fitness(Measurement(time_s=t, energy_ws=e * scale)) < base
+
+
+def test_tpu_average_watts_bounds():
+    pm = TpuPowerModel()
+    # fully idle: floor; fully active everything: sum of all components
+    assert pm.average_watts(1.0, 0.0, 0.0, 0.0) == pytest.approx(pm.p_idle)
+    top = pm.average_watts(1.0, 1.0, 1.0, 1.0)
+    assert top == pytest.approx(pm.p_idle + pm.p_mxu + pm.p_hbm + pm.p_ici)
+    # component active times beyond the step clamp at full utilization
+    assert pm.average_watts(1.0, 5.0, 5.0, 5.0) == pytest.approx(top)
+
+
+def test_dvfs_clock_trades_time_for_energy():
+    """The DVFS gene's premise, at model level: on a compute-bound cell a
+    lower clock is slower but (f³ dynamic power × 1/f time) cheaper."""
+    from repro.core import Decisions, analyze_cell
+
+    cfg = get_config("qwen1.5-110b")
+    full = analyze_cell(cfg, SHAPES["train_4k"], {"data": 16, "model": 16},
+                        Decisions(clock=1.0))
+    slow = analyze_cell(cfg, SHAPES["train_4k"], {"data": 16, "model": 16},
+                        Decisions(clock=0.7))
+    assert full.breakdown["dominant"] == "compute"
+    assert slow.step_time > full.step_time
+    assert slow.energy < full.energy
 
 
 # ---------------------------------------------------------------------------
