@@ -8,6 +8,8 @@ Sections:
   mixed_env_*     — §3.3 staged destination selection
   fleet_*         — batched fleet sweep: executors, cross-cell cache,
                     per-cell time/energy Pareto frontiers (Fig.5 generalized)
+  serving_*       — static vs traffic-adaptive placement under live serving
+                    traffic (Watt·s per 1k tokens; persisted-cache resweep)
   roofline_*      — §Roofline summary per dry-run cell (when records exist)
   kernel_*        — kernel micro-benchmarks / TPU projections
   e2e_*           — end-to-end train/serve drivers (reduced configs)
@@ -23,11 +25,14 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 def main() -> None:
     rows: list[tuple] = []
 
-    from benchmarks import fleet_bench, ga_bench, himeno_bench, kernel_bench
+    from benchmarks import (
+        fleet_bench, ga_bench, himeno_bench, kernel_bench, serving_bench,
+    )
 
     rows += himeno_bench.run()
     rows += ga_bench.run()
     rows += fleet_bench.run()
+    rows += serving_bench.run()
     rows += kernel_bench.run()
 
     # end-to-end drivers (reduced configs, CPU)

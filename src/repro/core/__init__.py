@@ -15,6 +15,10 @@ from repro.core.evaluator import (
     CacheStats, EvalCache, EvalEngine, SerialExecutor, ThreadedExecutor,
     VectorizedExecutor,
 )
+from repro.core.cache_store import (
+    CacheStore, PersistentEvalCache, measurement_from_json,
+    measurement_to_json, stable_key,
+)
 from repro.core.ga import GAConfig, GAResult, run_ga
 from repro.core.genome import Gene, GenomeSpace, binary_space
 from repro.core.power import (
@@ -25,12 +29,12 @@ from repro.core.lm_cost_model import (
     measure_cell, measure_cell_batch,
 )
 from repro.core.pareto import (
-    ParetoPoint, dominates, fleet_frontier, narrow, pareto_frontier,
-    select_operating_point,
+    ParetoPoint, dominates, fleet_frontier, frontier_by_cell, narrow,
+    pareto_frontier, select_operating_point,
 )
 from repro.core.offload_search import (
     CellSpec, FleetCellResult, FleetResult, lm_cell_key, lm_genome_space,
-    search_fleet, search_himeno, search_lm_cell,
+    mesh_label, search_fleet, search_himeno, search_lm_cell,
 )
 from repro.core.candidates import NarrowingConfig, narrow_and_measure
 from repro.core.device_select import Destination, select_destination
@@ -39,16 +43,19 @@ __all__ = [
     "Measurement", "TIMEOUT_SECONDS", "UserRequirement", "fitness",
     "CacheStats", "EvalCache", "EvalEngine", "SerialExecutor",
     "ThreadedExecutor", "VectorizedExecutor",
+    "CacheStore", "PersistentEvalCache", "measurement_from_json",
+    "measurement_to_json", "stable_key",
     "GAConfig", "GAResult", "run_ga",
     "Gene", "GenomeSpace", "binary_space",
     "HardwareSpec", "PaperPowerModel", "RooflineTerms", "TPU_V5E",
     "TpuPowerModel",
     "Decisions", "analyze_cell", "canonical_decisions", "cell_cache_key",
     "measure_cell", "measure_cell_batch",
-    "ParetoPoint", "dominates", "fleet_frontier", "narrow",
-    "pareto_frontier", "select_operating_point",
+    "ParetoPoint", "dominates", "fleet_frontier", "frontier_by_cell",
+    "narrow", "pareto_frontier", "select_operating_point",
     "CellSpec", "FleetCellResult", "FleetResult", "lm_cell_key",
-    "lm_genome_space", "search_fleet", "search_himeno", "search_lm_cell",
+    "lm_genome_space", "mesh_label", "search_fleet", "search_himeno",
+    "search_lm_cell",
     "NarrowingConfig", "narrow_and_measure",
     "Destination", "select_destination",
 ]

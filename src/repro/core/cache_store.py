@@ -1,0 +1,149 @@
+"""Disk persistence for the cross-cell :class:`EvalCache` (ROADMAP item 3).
+
+The in-memory cache makes a fleet sweep incremental *within* one engine
+lifetime; this module makes it incremental *across processes*: every
+first-time measurement is appended to a JSONL file under ``results/`` and a
+fresh engine constructed over the same file starts with the whole history —
+a repeated sweep then performs zero new measurements (the paper's
+"each distinct pattern measured once", extended to the deployment's whole
+history of sweeps).
+
+Keys are arbitrary Hashables in memory (tuples of frozen dataclasses for the
+semantic LM keys). On disk they become :func:`stable_key` strings — ``repr``
+of the key, which is deterministic across processes for the tuples, frozen
+dataclasses, strings, ints and floats these keys are built from (no
+id-based reprs, no hash randomization exposure). Two processes therefore
+agree on every key, and a measurement made by one is a hit for the other.
+
+Durability model: appends happen under the cache lock, one line per entry,
+``flush`` per append. A crash can at worst truncate the final line;
+:meth:`CacheStore.load` skips undecodable lines, so a torn tail costs one
+re-measurement, never a corrupt cache.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Hashable, Optional
+
+from repro.core.evaluator import EvalCache
+from repro.core.fitness import Measurement
+
+
+def stable_key(key: Hashable) -> str:
+    """Deterministic cross-process string form of a cache key."""
+    return repr(key)
+
+
+# ---------------------------------------------------------------------------
+# Measurement <-> JSON
+# ---------------------------------------------------------------------------
+
+
+def measurement_to_json(m: Measurement) -> dict:
+    out = {
+        "time_s": m.time_s,
+        "energy_ws": m.energy_ws,
+        "timed_out": m.timed_out,
+        "feasible": m.feasible,
+        "avg_watts": m.avg_watts,
+    }
+    if m.detail is not None:
+        try:
+            json.dumps(m.detail)
+            out["detail"] = m.detail
+        except (TypeError, ValueError):
+            # detail is advisory; never let an exotic payload block persistence
+            out["detail"] = None
+    return out
+
+
+def measurement_from_json(d: dict) -> Measurement:
+    return Measurement(
+        time_s=d["time_s"],
+        energy_ws=d["energy_ws"],
+        timed_out=d.get("timed_out", False),
+        feasible=d.get("feasible", True),
+        avg_watts=d.get("avg_watts"),
+        detail=d.get("detail"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# JSONL store
+# ---------------------------------------------------------------------------
+
+
+class CacheStore:
+    """Append-only JSONL file of ``{"key", "cell", "m"}`` records."""
+
+    def __init__(self, path: str) -> None:
+        self.path = path
+        self._lock = threading.Lock()
+        self._fh = None
+
+    def load(self) -> dict[str, tuple[str, Measurement]]:
+        """All decodable records, last-writer-wins per key (duplicates can
+        only carry identical measurements, so the order is immaterial)."""
+        entries: dict[str, tuple[str, Measurement]] = {}
+        if not os.path.exists(self.path):
+            return entries
+        with open(self.path, "r", encoding="utf-8") as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                    entries[rec["key"]] = (rec.get("cell", ""),
+                                           measurement_from_json(rec["m"]))
+                except (json.JSONDecodeError, KeyError, TypeError):
+                    continue  # torn/foreign line: skip, re-measure later
+        return entries
+
+    def append(self, key: str, cell: str, m: Measurement) -> None:
+        line = json.dumps({"key": key, "cell": cell,
+                           "m": measurement_to_json(m)})
+        with self._lock:
+            if self._fh is None:
+                d = os.path.dirname(self.path)
+                if d:
+                    os.makedirs(d, exist_ok=True)
+                self._fh = open(self.path, "a", encoding="utf-8")
+            self._fh.write(line + "\n")
+            self._fh.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            if self._fh is not None:
+                self._fh.close()
+                self._fh = None
+
+
+# ---------------------------------------------------------------------------
+# Disk-backed cache
+# ---------------------------------------------------------------------------
+
+
+class PersistentEvalCache(EvalCache):
+    """An :class:`EvalCache` whose inserts stream to a :class:`CacheStore`
+    and whose constructor replays the store — pass it to an ``EvalEngine``
+    and every ``search_fleet`` sweep in every process shares one measurement
+    history. Preloaded entries do not count as inserts, so a re-sweep's
+    ``FleetResult.evaluations`` is exactly the number of *new* measurements
+    (0 for a repeat sweep)."""
+
+    def __init__(self, path: str, *, store: Optional[CacheStore] = None
+                 ) -> None:
+        super().__init__()
+        self.store = store or CacheStore(path)
+        loaded = self.store.load()
+        self.preload(loaded)
+        self.preloaded = len(loaded)
+
+    def _key(self, key: Hashable) -> str:
+        return key if isinstance(key, str) else stable_key(key)
+
+    def _on_insert(self, key: Hashable, cell: str, m: Measurement) -> None:
+        self.store.append(key, cell, m)

@@ -45,6 +45,7 @@ def select_destination(
     spent = 0.0
     early = False
 
+    satisfier: Optional[str] = None
     for i, dest in enumerate(ordered):
         pattern, meas = dest.search()
         verified[dest.name] = meas
@@ -52,12 +53,24 @@ def select_destination(
         spent += dest.verify_cost_s
         if requirement is not None and requirement.satisfied(meas):
             early = True  # paper: later (more expensive) targets not verified
+            satisfier = dest.name
             break
 
     remaining = [d.name for d in ordered if d.name not in verified]
     valid = {n: m for n, m in verified.items()
              if m.feasible and not m.timed_out}
-    chosen = max(valid, key=lambda n: fitness_fn(valid[n])) if valid else None
+    if satisfier is not None:
+        # §3.3 early exit ADOPTS the destination that satisfied the
+        # requirement: cheaper targets verified on the way there may score a
+        # higher fitness, but they failed the requirement — a max(fitness)
+        # over everything verified so far would silently override the
+        # satisfying destination (the pre-PR-2 bug).
+        chosen: Optional[str] = satisfier
+    else:
+        # full verification (no requirement, or nothing satisfied it): every
+        # destination scored with the paper's fitness, best wins.
+        chosen = (max(valid, key=lambda n: fitness_fn(valid[n]))
+                  if valid else None)
     return SelectionReport(
         order=[d.name for d in ordered],
         verified=verified,

@@ -68,7 +68,16 @@ class CacheStats:
 
 
 class EvalCache:
-    """Thread-safe measurement cache shared across cells and GA runs."""
+    """Thread-safe measurement cache shared across cells and GA runs.
+
+    Subclass hooks (both called with the cache lock held):
+
+    * ``_key`` canonicalizes a caller key before storage/lookup — a
+      disk-backed cache maps arbitrary Hashables to stable strings so
+      entries survive process boundaries (see core/cache_store.py).
+    * ``_on_insert`` observes every first-time insert — the persistence
+      point; the base cache keeps everything in memory only.
+    """
 
     def __init__(self) -> None:
         self._lock = threading.Lock()
@@ -78,7 +87,21 @@ class EvalCache:
         self._cross = 0
         self._inserts = 0
 
+    def _key(self, key: Hashable) -> Hashable:
+        return key
+
+    def _on_insert(self, key: Hashable, cell: str, m: Measurement) -> None:
+        pass
+
+    def preload(self, entries: dict[Hashable, tuple[str, Measurement]]) -> None:
+        """Seed entries (already in ``_key`` form) without touching the
+        lookup/insert counters: preloaded state is history, not traffic."""
+        with self._lock:
+            for k, rec in entries.items():
+                self._data.setdefault(k, rec)
+
     def get(self, key: Hashable, cell: str) -> Optional[Measurement]:
+        key = self._key(key)
         with self._lock:
             self._lookups += 1
             rec = self._data.get(key)
@@ -90,10 +113,12 @@ class EvalCache:
             return rec[1]
 
     def put(self, key: Hashable, cell: str, m: Measurement) -> None:
+        key = self._key(key)
         with self._lock:
             if key not in self._data:  # first writer wins (values identical)
                 self._data[key] = (cell, m)
                 self._inserts += 1
+                self._on_insert(key, cell, m)
 
     def stats(self) -> CacheStats:
         with self._lock:

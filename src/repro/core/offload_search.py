@@ -89,10 +89,16 @@ def decisions_from(space: GenomeSpace, genome: tuple[int, ...],
     return replace(base, **{k: v for k, v in assignment.items() if k in known})
 
 
+def mesh_label(mesh_shape: dict[str, int]) -> str:
+    """Canonical mesh/destination label ("data16xmodel16", ...). The single
+    definition: cell keys embed it and the placement controller matches
+    chosen destinations back to fleet cells by it."""
+    return "x".join(f"{k}{v}" for k, v in sorted(mesh_shape.items()))
+
+
 def lm_cell_key(cfg: ArchConfig, shape: ShapeSpec,
                 mesh_shape: dict[str, int], seed: int = 0) -> str:
-    mesh = "x".join(f"{k}{v}" for k, v in sorted(mesh_shape.items()))
-    key = f"{cfg.name}/{shape.name}/{mesh}"
+    key = f"{cfg.name}/{shape.name}/{mesh_label(mesh_shape)}"
     return f"{key}#s{seed}" if seed else key
 
 
@@ -238,6 +244,15 @@ class FleetResult:
     @property
     def cache_hit_rate(self) -> float:
         return self.cache.hit_rate
+
+    def by_cell(self) -> dict[str, FleetCellResult]:
+        return {cr.cell: cr for cr in self.cells}
+
+    def decisions_for(self, point: ParetoPoint) -> Decisions:
+        """Resolve a frontier point back to executable ``Decisions`` through
+        its cell's genome space (frontier points only carry raw genomes)."""
+        cr = self.by_cell()[point.cell]
+        return decisions_from(cr.search.space, point.genome)
 
 
 def search_fleet(

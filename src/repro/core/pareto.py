@@ -84,6 +84,18 @@ def fleet_frontier(cell_frontiers: Iterable[Sequence[ParetoPoint]]
     return pareto_frontier(merged)
 
 
+def frontier_by_cell(points: Iterable[ParetoPoint]
+                     ) -> dict[str, list[ParetoPoint]]:
+    """Group (fleet-)frontier points by their owning cell, preserving order.
+    A cell absent from the result had every point dominated by another
+    cell's placements — the signal the placement controller uses to drop a
+    candidate destination before staged verification."""
+    out: dict[str, list[ParetoPoint]] = {}
+    for p in points:
+        out.setdefault(p.cell, []).append(p)
+    return out
+
+
 def narrow(points: Iterable[ParetoPoint], req: Optional[UserRequirement]
            ) -> list[ParetoPoint]:
     """§3.3 narrowing: keep the points satisfying the user requirement."""

@@ -1,24 +1,47 @@
-"""Serving driver: batched requests through the wave-scheduled engine."""
+"""Serving driver: batched requests through the wave-scheduled engine.
+
+``--adaptive`` attaches the traffic-adaptive placement controller
+(runtime/placement.py): the engine starts on the static paper-faithful
+placement and re-plans between waves from the observed traffic mix, through
+the disk-persisted measurement cache under ``results/``.
+"""
 from __future__ import annotations
 
 import argparse
 import time
+from typing import Optional
 
 import jax
 
 from repro.configs import get_config, reduced as reduce_cfg
 from repro import models as M
-from repro.runtime import Request, ServingEngine
+from repro.core.ga import GAConfig
+from repro.runtime import PlacementController, Request, ServingEngine, \
+    static_placements
+from repro.runtime.placement import DEFAULT_MESH_OPTIONS
+
+DEFAULT_MESH = DEFAULT_MESH_OPTIONS[0]
 
 
 def serve(arch: str = "llama3.2-3b", *, use_reduced: bool = True,
           num_requests: int = 8, slots: int = 4, max_new_tokens: int = 8,
-          max_len: int = 64) -> dict:
+          max_len: int = 64, adaptive: bool = False,
+          cache_path: Optional[str] = "results/eval_cache.jsonl",
+          interval_waves: int = 1) -> dict:
     cfg = get_config(arch)
     if use_reduced:
         cfg = reduce_cfg(cfg)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     engine = ServingEngine(cfg, params, slots=slots, max_len=max_len)
+    # modeled production-cell energy rates (full config, not the reduced one
+    # actually decoding locally): the Watt·s ledger the search minimizes
+    engine.reconfigure(static_placements(arch, DEFAULT_MESH))
+    controller = None
+    if adaptive:
+        controller = PlacementController(
+            engine, arch, DEFAULT_MESH_OPTIONS, cache_path=cache_path,
+            ga_config=GAConfig(population=10, generations=8),
+            interval_waves=interval_waves).attach()
     for i in range(num_requests):
         engine.submit(Request(rid=i, prompt=[1 + i % 7, 2, 3 + i % 5],
                               max_new_tokens=max_new_tokens))
@@ -26,12 +49,22 @@ def serve(arch: str = "llama3.2-3b", *, use_reduced: bool = True,
     done = engine.run()
     wall = time.time() - t0
     toks = engine.stats.decode_tokens
+    total = engine.stats.total_tokens
     return {
         "completed": len(done),
+        "rejected": engine.stats.rejected,
         "decode_tokens": toks,
         "wall_s": wall,
         "tokens_per_s": toks / max(wall, 1e-9),
         "waves": engine.stats.waves,
+        "energy_ws": engine.stats.energy_ws,
+        "ws_per_1k_tokens": engine.stats.energy_ws / max(total, 1) * 1e3,
+        "reconfigurations": engine.stats.reconfigurations,
+        "placements": {k: (p.destination, p.clock, p.source)
+                       for k, p in engine.placements.items()},
+        "new_measurements": (sum(r.new_measurements
+                                 for r in controller.history)
+                             if controller else 0),
         "outputs": {r.rid: r.output for r in done},
     }
 
@@ -43,13 +76,20 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="traffic-adaptive placement (observe/sweep/narrow/"
+                         "reconfigure between waves)")
     args = ap.parse_args()
     out = serve(args.arch, use_reduced=not args.full,
                 num_requests=args.requests, slots=args.slots,
-                max_new_tokens=args.max_new_tokens)
+                max_new_tokens=args.max_new_tokens, adaptive=args.adaptive)
     print(f"served {out['completed']} requests, {out['decode_tokens']} tokens "
           f"in {out['wall_s']:.2f}s ({out['tokens_per_s']:.1f} tok/s, "
           f"{out['waves']} waves)")
+    print(f"modeled energy: {out['energy_ws']:.0f} Ws "
+          f"({out['ws_per_1k_tokens']:.0f} Ws/1k tokens), "
+          f"{out['reconfigurations']} reconfigurations, "
+          f"placements={out['placements']}")
 
 
 if __name__ == "__main__":

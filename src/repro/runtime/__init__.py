@@ -1,9 +1,15 @@
 from repro.runtime.fault_tolerance import (
     ElasticOrchestrator, HeartbeatMonitor, StragglerDetector,
 )
-from repro.runtime.serving import EngineStats, Request, ServingEngine
+from repro.runtime.serving import (
+    EngineStats, Placement, Request, ServingEngine,
+)
+from repro.runtime.placement import (
+    PlacementController, PlanReport, TrafficMix, static_placements,
+)
 
 __all__ = [
     "ElasticOrchestrator", "HeartbeatMonitor", "StragglerDetector",
-    "EngineStats", "Request", "ServingEngine",
+    "EngineStats", "Placement", "Request", "ServingEngine",
+    "PlacementController", "PlanReport", "TrafficMix", "static_placements",
 ]

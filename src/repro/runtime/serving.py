@@ -10,11 +10,20 @@ new wave gets a fresh state so cache positions never alias between requests.
 This trades some slot utilization for exactness on all 10 architecture
 families with one code path; per-slot position streams are a serving-layer
 optimization documented as future work in DESIGN.md.
+
+Placement integration (PR 2): the engine carries per-shape-kind
+:class:`Placement` records (chosen by ``runtime/placement.py`` from fleet
+Pareto frontiers) whose per-token energy rates accumulate into
+``EngineStats.energy_ws`` as tokens are processed — the modeled Watt·s the
+offload search is minimizing, attributed to live traffic. Reconfiguration
+happens strictly *between* waves: ``run`` fires ``on_wave_end`` after each
+wave and ``reconfigure`` refuses to swap placements while a wave is decoding
+(a wave's tokens are costed under the placement that admitted it).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Callable, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +41,11 @@ class Request:
     eos_id: Optional[int] = None
     output: list[int] = field(default_factory=list)
     done: bool = False
+    # queued -> active -> done; "rejected" (never admitted) and "truncated"
+    # (admitted with a shortened prompt) are marked explicitly so callers
+    # never mistake an unserved or clipped request for a clean completion.
+    status: str = "queued"
+    truncated_tokens: int = 0  # prompt tokens dropped by the truncate policy
 
 
 @dataclass
@@ -41,25 +55,116 @@ class EngineStats:
     prefill_tokens: int = 0
     decode_tokens: int = 0
     completed: int = 0
+    rejected: int = 0  # refused at submit (prompt cannot fit max_len)
+    truncated: int = 0  # admitted with a clipped prompt
+    incomplete: int = 0  # wave exhausted before completion (defensive)
+    slot_steps: int = 0  # slots x steps: the occupancy denominator
+    active_slot_steps: int = 0  # slots actually decoding a request
+    energy_ws: float = 0.0  # modeled Watt·s under the applied placements
+    reconfigurations: int = 0
+
+    @property
+    def occupancy(self) -> float:
+        """Mean fraction of wave slots doing useful work."""
+        return self.active_slot_steps / self.slot_steps if self.slot_steps \
+            else 0.0
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prefill_tokens + self.decode_tokens
+
+    def snapshot(self) -> "EngineStats":
+        return EngineStats(**{f: getattr(self, f)
+                              for f in self.__dataclass_fields__})
+
+
+@dataclass(frozen=True)
+class Placement:
+    """One applied (cell, destination, operating point) choice for a shape
+    kind. ``energy_per_token_ws``/``time_per_token_s`` are the chosen
+    pattern's measurement normalized by the cell's tokens-per-step, so the
+    serving loop can integrate modeled energy over live traffic."""
+
+    kind: str  # "prefill" | "decode"
+    cell: str  # fleet cell key the pattern was searched in
+    destination: str  # chosen offload destination (mesh label)
+    decisions: object  # core.lm_cost_model.Decisions (kept opaque here)
+    clock: float  # DVFS operating point (1.0 = nominal)
+    energy_per_token_ws: float
+    time_per_token_s: float = 0.0
+    source: str = "static"  # static | adaptive
 
 
 class ServingEngine:
-    """Wave-batched greedy decoding over ``decode_step``."""
+    """Wave-batched greedy decoding over ``decode_step``.
+
+    ``overflow`` is the admission policy for prompts that cannot leave room
+    for a single generated token within ``max_len``:
+
+    * ``"reject"``   — refuse at ``submit`` (marked ``rejected``, counted in
+      ``stats.rejected``, never queued). The pre-PR-2 behavior silently
+      burned a full wave on such a request and then returned it as done.
+    * ``"truncate"`` — keep the prompt head (reserving the token budget),
+      mark the request ``truncated`` and serve it.
+    """
 
     def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
-                 max_len: int = 256):
+                 max_len: int = 256, overflow: str = "reject"):
+        if overflow not in ("reject", "truncate"):
+            raise ValueError(f"unknown overflow policy {overflow!r}")
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        self.overflow = overflow
         self.queue: list[Request] = []
+        self.rejected: list[Request] = []
         self.stats = EngineStats()
+        self.placements: dict[str, Placement] = {}
+        self.on_wave_end: Optional[Callable[["ServingEngine"], None]] = None
+        self._in_wave = False
         self._step = jax.jit(
             lambda params, state, tokens: T.decode_step(cfg, params, state,
                                                         tokens))
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Admit a request; False when rejected (empty prompt, or the
+        overflow policy refusing a prompt that cannot fit)."""
+        if not req.prompt:  # nothing to condition on; truncation can't help
+            req.status = "rejected"
+            self.stats.rejected += 1
+            self.rejected.append(req)
+            return False
+        if len(req.prompt) >= self.max_len:  # no room for a generated token
+            if self.overflow == "reject":
+                req.status = "rejected"
+                self.stats.rejected += 1
+                self.rejected.append(req)
+                return False
+            keep = max(1, self.max_len - max(req.max_new_tokens, 1))
+            req.truncated_tokens = len(req.prompt) - keep
+            req.prompt = req.prompt[:keep]
+            req.status = "truncated"
+            self.stats.truncated += 1
         self.queue.append(req)
+        return True
+
+    # ------------------------------------------------------------------
+    def reconfigure(self, placements: Mapping[str, Placement]) -> None:
+        """Swap per-kind placements — only ever between waves (§3.3's
+        reconfiguration point: an in-flight wave keeps the operating point
+        it was admitted under)."""
+        if self._in_wave:
+            raise RuntimeError("reconfigure() during a wave; use the "
+                               "on_wave_end hook to apply between waves")
+        was_configured = bool(self.placements)
+        self.placements = dict(placements)
+        if was_configured:  # the first application is configuration, not RE-
+            self.stats.reconfigurations += 1
+
+    def _token_energy(self, kind: str) -> float:
+        p = self.placements.get(kind)
+        return p.energy_per_token_ws if p is not None else 0.0
 
     # ------------------------------------------------------------------
     def _run_wave(self, wave: list[Request]) -> None:
@@ -67,37 +172,59 @@ class ServingEngine:
         cursors = [0] * len(wave)
         active = [True] * len(wave)
         self.stats.waves += 1
-        for _ in range(self.max_len):
-            if not any(active):
-                break
-            tokens = np.zeros((self.slots,), np.int32)
-            for i, req in enumerate(wave):
-                if not active[i]:
-                    continue
-                c = cursors[i]
-                tokens[i] = (req.prompt[c] if c < len(req.prompt)
-                             else req.output[-1])
-            logits, state = self._step(self.params, state, jnp.asarray(tokens))
-            self.stats.steps += 1
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))
-            for i, req in enumerate(wave):
-                if not active[i]:
-                    continue
-                cursors[i] += 1
-                if cursors[i] < len(req.prompt):
-                    self.stats.prefill_tokens += 1
-                    continue
-                tok = int(nxt[i])
-                req.output.append(tok)
-                self.stats.decode_tokens += 1
-                if ((req.eos_id is not None and tok == req.eos_id)
-                        or len(req.output) >= req.max_new_tokens
-                        or cursors[i] + 1 >= self.max_len):
-                    req.done = True
-                    active[i] = False
-                    self.stats.completed += 1
+        self._in_wave = True
+        for req in wave:
+            if req.status == "queued":
+                req.status = "active"
+        try:
+            for _ in range(self.max_len):
+                if not any(active):
+                    break
+                tokens = np.zeros((self.slots,), np.int32)
+                for i, req in enumerate(wave):
+                    if not active[i]:
+                        continue
+                    c = cursors[i]
+                    tokens[i] = (req.prompt[c] if c < len(req.prompt)
+                                 else req.output[-1])
+                logits, state = self._step(self.params, state,
+                                           jnp.asarray(tokens))
+                self.stats.steps += 1
+                self.stats.slot_steps += self.slots
+                self.stats.active_slot_steps += sum(active)
+                nxt = np.asarray(jnp.argmax(logits, axis=-1))
+                for i, req in enumerate(wave):
+                    if not active[i]:
+                        continue
+                    cursors[i] += 1
+                    if cursors[i] < len(req.prompt):
+                        self.stats.prefill_tokens += 1
+                        self.stats.energy_ws += self._token_energy("prefill")
+                        continue
+                    tok = int(nxt[i])
+                    req.output.append(tok)
+                    self.stats.decode_tokens += 1
+                    self.stats.energy_ws += self._token_energy("decode")
+                    if ((req.eos_id is not None and tok == req.eos_id)
+                            or len(req.output) >= req.max_new_tokens
+                            or cursors[i] + 1 >= self.max_len):
+                        req.done = True
+                        if req.status != "truncated":  # keep the clip marker
+                            req.status = "done"
+                        active[i] = False
+                        self.stats.completed += 1
+        finally:
+            self._in_wave = False
+        # Defensive: the submit guard makes wave exhaustion unreachable, but
+        # if it ever happens the request is marked, not laundered as done.
+        for i, req in enumerate(wave):
+            if active[i]:
+                req.status = "incomplete"
+                self.stats.incomplete += 1
 
     def run(self, max_waves: int = 64) -> list[Request]:
+        """Serve up to ``max_waves`` waves; returns the *finished* requests
+        only (pre-PR-2 this list could contain never-completed requests)."""
         done: list[Request] = []
         for _ in range(max_waves):
             if not self.queue:
@@ -105,5 +232,7 @@ class ServingEngine:
             wave = [self.queue.pop(0)
                     for _ in range(min(self.slots, len(self.queue)))]
             self._run_wave(wave)
-            done.extend(wave)
+            done.extend(r for r in wave if r.done)
+            if self.on_wave_end is not None:
+                self.on_wave_end(self)
         return done

@@ -1,0 +1,103 @@
+"""Disk persistence of the cross-cell EvalCache (core/cache_store.py)."""
+import json
+
+from repro.configs import SHAPES, get_config
+from repro.core.cache_store import (
+    CacheStore, PersistentEvalCache, measurement_from_json,
+    measurement_to_json, stable_key,
+)
+from repro.core.evaluator import EvalEngine, VectorizedExecutor
+from repro.core.fitness import Measurement
+from repro.core.ga import GAConfig
+from repro.core.lm_cost_model import Decisions, cell_cache_key
+from repro.core.offload_search import CellSpec, search_fleet
+
+MESH = {"data": 16, "model": 16}
+
+
+def test_measurement_json_roundtrip_exact():
+    cases = [
+        Measurement(1.5, 2.25),
+        Measurement(0.1, 0.2, timed_out=True, avg_watts=33.5),
+        Measurement(3.0, 4.0, feasible=False,
+                    detail={"dominant": "memory", "chips": 256, "x": 0.125}),
+    ]
+    for m in cases:
+        assert measurement_from_json(measurement_to_json(m)) == m
+
+
+def test_measurement_json_drops_unserializable_detail():
+    m = Measurement(1.0, 2.0, detail={"fn": lambda: None})
+    d = measurement_to_json(m)
+    assert d["detail"] is None
+    json.dumps(d)  # the record itself must always serialize
+
+
+def test_stable_key_deterministic_for_semantic_lm_keys():
+    mk = lambda: cell_cache_key(get_config("llama3.2-3b"),  # noqa: E731
+                                SHAPES["prefill_32k"], MESH, Decisions())
+    assert stable_key(mk()) == stable_key(mk())
+    # distinct decisions -> distinct keys
+    other = cell_cache_key(get_config("llama3.2-3b"), SHAPES["prefill_32k"],
+                           MESH, Decisions(clock=0.7))
+    assert stable_key(other) != stable_key(mk())
+
+
+def test_persistent_cache_roundtrips_through_fresh_instance(tmp_path):
+    path = str(tmp_path / "cache.jsonl")
+    c1 = PersistentEvalCache(path)
+    key = ("cell", (0, 1, 2))
+    m = Measurement(1.25, 7.5, avg_watts=42.0, detail={"dominant": "compute"})
+    c1.put(key, "cellA", m)
+    assert c1.stats().inserts == 1
+
+    c2 = PersistentEvalCache(path)  # fresh process stand-in
+    assert c2.preloaded == 1
+    got = c2.get(key, "cellA")
+    assert got == m
+    assert c2.stats().hits == 1 and c2.stats().inserts == 0
+
+
+def test_persistent_cache_skips_torn_and_foreign_lines(tmp_path):
+    path = str(tmp_path / "cache.jsonl")
+    c1 = PersistentEvalCache(path)
+    c1.put("good", "c", Measurement(1.0, 2.0))
+    with open(path, "a", encoding="utf-8") as fh:
+        fh.write('{"key": "torn", "cell": "c", "m": {"time_s"\n')  # crash tail
+        fh.write('not json at all\n')
+        fh.write('{"unrelated": true}\n')
+    c2 = PersistentEvalCache(path)
+    assert c2.preloaded == 1
+    assert c2.get("good", "c") == Measurement(1.0, 2.0)
+
+
+def test_fresh_engine_repeated_sweep_is_all_hits(tmp_path):
+    """ROADMAP item 3: save -> fresh engine -> 100% hit rate on a resweep."""
+    path = str(tmp_path / "cache.jsonl")
+    fleet = [CellSpec.create("llama3.2-3b", "prefill_32k", MESH),
+             CellSpec.create("llama3.2-3b", "decode_32k", MESH)]
+    ga = GAConfig(population=6, generations=5, seed=0)
+
+    eng1 = EvalEngine(executor=VectorizedExecutor(),
+                      cache=PersistentEvalCache(path))
+    r1 = search_fleet(fleet, ga_config=ga, engine=eng1, cell_workers=1)
+    assert r1.evaluations > 0
+
+    eng2 = EvalEngine(executor=VectorizedExecutor(),
+                      cache=PersistentEvalCache(path))
+    r2 = search_fleet(fleet, ga_config=ga, engine=eng2, cell_workers=1)
+    assert r2.evaluations == 0  # zero redundant measurements
+    assert r2.cache_hit_rate == 1.0
+    # and identical results: winners and frontiers agree across processes
+    for a, b in zip(r1.cells, r2.cells):
+        assert a.search.ga.best.genome == b.search.ga.best.genome
+        assert [(p.time_s, p.energy_ws) for p in a.search.frontier] \
+            == [(p.time_s, p.energy_ws) for p in b.search.frontier]
+
+
+def test_cache_store_duplicate_append_last_wins(tmp_path):
+    path = str(tmp_path / "cache.jsonl")
+    store = CacheStore(path)
+    store.append("k", "a", Measurement(1.0, 1.0))
+    store.append("k", "a", Measurement(1.0, 1.0))
+    assert len(store.load()) == 1

@@ -242,3 +242,34 @@ def test_selection_handles_infeasible():
         _dest("gpu", 60, 19.0, 2071.0),
     ])
     assert rep.chosen == "gpu"
+
+
+def test_selection_early_exit_adopts_satisfier_not_max_fitness():
+    """§3.3: early exit ADOPTS the destination that satisfied the
+    requirement. Pre-PR-2, max(fitness) over everything verified so far
+    silently overrode it: here the cheap destination scores a far higher
+    fitness but fails the requirement, so the satisfier must win."""
+    req = UserRequirement(max_time_s=5.0)
+    rep = select_destination([
+        _dest("cheap_fast", 1, 8.0, 10.0),     # fitness ~0.112, fails req
+        _dest("mid", 10, 4.0, 100.0),          # fitness 0.05, satisfies req
+        _dest("expensive", 1000, 1.0, 1.0),    # never verified
+    ], requirement=req)
+    assert rep.early_exit
+    assert rep.chosen == "mid"
+    assert rep.verified.keys() == {"cheap_fast", "mid"}
+    assert rep.skipped == ["expensive"]
+
+
+def test_selection_requirement_unsatisfied_falls_back_to_fitness():
+    """Both semantics coexist: when nothing satisfies the requirement, every
+    destination is verified and the paper's fitness picks the winner."""
+    req = UserRequirement(max_time_s=0.5)  # nobody satisfies
+    rep = select_destination([
+        _dest("fpga", 4 * 3600, 10.0, 250.0),
+        _dest("gpu", 60, 19.0, 2071.0),
+        _dest("manycore", 30, 40.0, 2680.0),
+    ], requirement=req)
+    assert not rep.early_exit
+    assert rep.verified.keys() == {"manycore", "gpu", "fpga"}
+    assert rep.chosen == "fpga"  # max fitness, same as the no-requirement path

@@ -68,7 +68,75 @@ def test_serving_eos_stops(small_model):
     eng2 = ServingEngine(cfg, params, slots=1, max_len=64)
     eng2.submit(Request(rid=1, prompt=[3, 4], max_new_tokens=8, eos_id=first))
     done = eng2.run()
+    # eos on the very first decode token: exactly one token, marked done
     assert done[0].output == [first]
+    assert done[0].done and done[0].status == "done"
+    assert eng2.stats.completed == 1 and eng2.stats.decode_tokens == 1
+
+
+def test_serving_empty_queue_is_noop(small_model):
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, slots=2, max_len=32)
+    assert eng.run() == []
+    assert eng.stats.waves == 0 and eng.stats.steps == 0
+
+
+def test_serving_rejects_prompt_at_or_over_max_len(small_model):
+    """Pre-PR-2, a prompt >= max_len burned a full wave without completing
+    and was still returned in the done list."""
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, slots=2, max_len=16)
+    over = Request(rid=0, prompt=list(range(1, 21)), max_new_tokens=4)
+    ok = eng.submit(over)
+    assert not ok and over.status == "rejected" and not over.done
+    assert eng.stats.rejected == 1 and eng.rejected == [over]
+    fits = Request(rid=1, prompt=[1, 2, 3], max_new_tokens=4)
+    assert eng.submit(fits)
+    done = eng.run()
+    assert done == [fits]  # the rejected request is never served
+    assert eng.stats.completed == 1 and eng.stats.incomplete == 0
+
+
+def test_serving_rejects_empty_prompt(small_model):
+    """An empty prompt has no token to condition on; admitting it used to
+    crash the whole wave (output[-1] on an empty list), taking co-batched
+    requests down with it."""
+    cfg, params = small_model
+    for policy in ("reject", "truncate"):
+        eng = ServingEngine(cfg, params, slots=2, max_len=16,
+                            overflow=policy)
+        empty = Request(rid=0, prompt=[], max_new_tokens=4)
+        assert not eng.submit(empty)
+        assert empty.status == "rejected" and eng.stats.rejected == 1
+        ok = Request(rid=1, prompt=[1, 2], max_new_tokens=2)
+        assert eng.submit(ok)
+        assert eng.run() == [ok]  # the healthy request still serves
+
+
+def test_serving_truncate_policy_serves_clipped_prompt(small_model):
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, slots=1, max_len=16, overflow="truncate")
+    req = Request(rid=0, prompt=list(range(1, 21)), max_new_tokens=4)
+    assert eng.submit(req)
+    assert req.status == "truncated"
+    assert len(req.prompt) == 12 and req.truncated_tokens == 8
+    done = eng.run()
+    assert done == [req] and req.done and len(req.output) == 4
+    assert req.status == "truncated"  # clip marker survives completion
+    # stats consistent: p-1 prefill feeds, max_new decode tokens, 1 completion
+    assert eng.stats.prefill_tokens == 11
+    assert eng.stats.decode_tokens == 4
+    assert eng.stats.completed == 1 and eng.stats.incomplete == 0
+
+
+def test_serving_occupancy_tracks_idle_slots(small_model):
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, slots=4, max_len=32)
+    eng.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=3))
+    eng.run()
+    # 1 of 4 slots busy the whole wave
+    assert eng.stats.slot_steps == 4 * eng.stats.steps
+    assert eng.stats.occupancy == 0.25
 
 
 # ---------------------------------------------------------------------------
