@@ -1,0 +1,53 @@
+"""One JSON artifact shape for every benchmark's ``--json`` output.
+
+CI uploads these as per-commit artifacts; a uniform top-level schema means
+trajectory tooling can diff any benchmark the same way:
+
+    {
+      "schema": 1,
+      "bench": "<benchmark name>",
+      "scenarios": {"<scenario>": {...metrics...}, ...},
+      "metrics": {...benchmark-wide metrics...},
+      "cache": {"lookups", "hits", "cross_cell_hits", "inserts", "hit_rate"}
+    }
+
+``scenarios`` holds per-scenario/per-cell results; ``metrics`` the
+benchmark-wide summary; ``cache`` the shared EvalEngine cache traffic (all
+zeros for benchmarks that do not evaluate through an engine).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+SCHEMA_VERSION = 1
+
+
+def cache_stats_json(stats=None) -> dict:
+    """Serialize a :class:`repro.core.evaluator.CacheStats` (or None)."""
+    if stats is None:
+        return {"lookups": 0, "hits": 0, "cross_cell_hits": 0, "inserts": 0,
+                "hit_rate": 0.0}
+    return {"lookups": stats.lookups, "hits": stats.hits,
+            "cross_cell_hits": stats.cross_cell_hits,
+            "inserts": stats.inserts, "hit_rate": stats.hit_rate}
+
+
+def artifact(bench: str, *, scenarios: Optional[dict] = None,
+             metrics: Optional[dict] = None, cache=None) -> dict:
+    """Assemble the unified record. ``cache`` may be a CacheStats, an
+    already-serialized dict, or None."""
+    if not isinstance(cache, dict):
+        cache = cache_stats_json(cache)
+    return {"schema": SCHEMA_VERSION, "bench": bench,
+            "scenarios": scenarios or {}, "metrics": metrics or {},
+            "cache": cache}
+
+
+def write_artifact(path: str, record: dict) -> None:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(record, fh, indent=2, sort_keys=True)

@@ -14,11 +14,22 @@ vectorized analytic engine) and reports:
   fleet_resweep_hit_rate
       — re-sweeping the same fleet against the persistent cache: every
         measurement is a hit (nightly re-verification costs ~nothing)
+
+``--json BENCH_fleet.json`` writes the unified benchmark artifact
+(benchmarks/artifact.py).
 """
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import time
 
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from benchmarks.artifact import artifact, write_artifact  # noqa: E402
 from repro.core.evaluator import (
     EvalEngine, SerialExecutor, ThreadedExecutor, VectorizedExecutor,
 )
@@ -50,8 +61,9 @@ def _sweep(engine: EvalEngine, workers: int):
     return fleet, time.perf_counter() - t0
 
 
-def run() -> list[tuple]:
+def run(json_path=None) -> list[tuple]:
     rows: list[tuple] = []
+    scenarios: dict = {}
 
     serial, t_serial = _sweep(EvalEngine(executor=SerialExecutor()), 0)
     thread, t_thread = _sweep(EvalEngine(executor=ThreadedExecutor()), 4)
@@ -67,6 +79,12 @@ def run() -> list[tuple]:
             f"hit_rate={fleet.cache_hit_rate:.3f} "
             f"cross_cell_hits={fleet.cache.cross_cell_hits} "
             f"speedup_vs_serial={t_serial / max(wall, 1e-9):.2f}x"))
+        scenarios[f"executor_{name}"] = {
+            "wall_s": wall, "cells": len(fleet.cells),
+            "evaluations": fleet.evaluations,
+            "hit_rate": fleet.cache_hit_rate,
+            "cross_cell_hits": fleet.cache.cross_cell_hits,
+            "speedup_vs_serial": t_serial / max(wall, 1e-9)}
 
     # determinism cross-check: executors must agree on every cell's winner
     agree = all(
@@ -89,6 +107,12 @@ def run() -> list[tuple]:
                      f"energy_saving_vs_baseline={saving:.1%} "
                      f"best_fit={cr.search.ga.best.fitness:.5f} "
                      f"baseline_fit={fitness(base):.5f}"))
+        scenarios[f"cell_{cr.cell}"] = {
+            "frontier_points": len(front),
+            "frontier": [{"time_s": p.time_s, "energy_ws": p.energy_ws}
+                         for p in front],
+            "energy_saving_vs_baseline": saving,
+            "baseline_energy_ws": base.energy_ws}
 
     rows.append(("fleet_frontier_fleetwide", float(len(serial.frontier)),
                  "globally non-dominated (cell, pattern) placements"))
@@ -122,10 +146,33 @@ def run() -> list[tuple]:
     rows.append(("fleet_thread_blocking_speedup", walls["thread"] * 1e6,
                  f"{walls['serial'] / max(walls['thread'], 1e-9):.2f}x "
                  f"vs serial with a 2ms blocking verifier"))
+
+    if json_path:
+        write_artifact(json_path, artifact(
+            "fleet_bench",
+            scenarios=scenarios,
+            metrics={
+                "executors_agree": agree,
+                "fleetwide_frontier_points": len(serial.frontier),
+                "resweep_evaluations": resweep.evaluations,
+                "resweep_hit_rate": resweep.cache_hit_rate,
+                "thread_blocking_speedup":
+                    walls["serial"] / max(walls["thread"], 1e-9),
+            },
+            cache=vec_engine.cache.stats()))
     return rows
 
 
-if __name__ == "__main__":
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write the machine-readable record here "
+                         "(e.g. BENCH_fleet.json)")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
-    for name, us, derived in run():
+    for name, us, derived in run(json_path=args.json):
         print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,12 +10,19 @@ Sections:
                     per-cell time/energy Pareto frontiers (Fig.5 generalized)
   serving_*       — static vs traffic-adaptive placement under live serving
                     traffic (Watt·s per 1k tokens; persisted-cache resweep)
+  power_*         — metered Watt·s through the telemetry layer (Fig.5 via
+                    trace integration; model calibration vs measurements)
   roofline_*      — §Roofline summary per dry-run cell (when records exist)
   kernel_*        — kernel micro-benchmarks / TPU projections
   e2e_*           — end-to-end train/serve drivers (reduced configs)
+
+``--json-dir DIR`` writes the unified BENCH_*.json artifact
+(benchmarks/artifact.py: schema, bench, scenarios, metrics, cache) for
+every benchmark that produces one (fleet, serving, power).
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 
@@ -23,16 +30,30 @@ sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json-dir", default=None,
+                    help="directory for the per-benchmark BENCH_*.json "
+                         "artifacts (unified schema)")
+    args = ap.parse_args()
+    jd = args.json_dir
+    if jd:
+        os.makedirs(jd, exist_ok=True)
+
+    def art(name: str):
+        return os.path.join(jd, f"BENCH_{name}.json") if jd else None
+
     rows: list[tuple] = []
 
     from benchmarks import (
-        fleet_bench, ga_bench, himeno_bench, kernel_bench, serving_bench,
+        fleet_bench, ga_bench, himeno_bench, kernel_bench, power_bench,
+        serving_bench,
     )
 
     rows += himeno_bench.run()
     rows += ga_bench.run()
-    rows += fleet_bench.run()
-    rows += serving_bench.run()
+    rows += fleet_bench.run(json_path=art("fleet"))
+    rows += serving_bench.run(json_path=art("serving"))
+    rows += power_bench.run(json_path=art("power"))
     rows += kernel_bench.run()
 
     # end-to-end drivers (reduced configs, CPU)

@@ -24,7 +24,6 @@ machine-readable trajectory record CI uploads as an artifact.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import time
@@ -34,6 +33,7 @@ sys.path.insert(0, _ROOT)
 sys.path.insert(0, os.path.join(_ROOT, "src"))
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+from benchmarks.artifact import artifact, cache_stats_json, write_artifact  # noqa: E402
 from repro.runtime.placement import DEFAULT_MESH_OPTIONS as MESH_OPTIONS  # noqa: E402
 
 ARCH = "llama3.2-3b"
@@ -97,6 +97,8 @@ def _serve(cfg, params, scenario: str, *, adaptive: bool,
     wall = time.perf_counter() - t0
     s = engine.stats
     return {
+        "cache": (cache_stats_json(controller.eval_engine.cache.stats())
+                  if controller else cache_stats_json(None)),
         "completed": len(done),
         "tokens": s.total_tokens,
         "energy_ws": s.energy_ws,
@@ -125,16 +127,15 @@ def run(json_path=None) -> list[tuple]:
     scenarios = ("prefill_heavy", "decode_heavy", "mixed_burst")
 
     rows: list[tuple] = []
-    record = {"arch": ARCH, "mesh_options": [dict(m) for m in MESH_OPTIONS],
-              "scenarios": {}}
+    scenario_records: dict = {}
     wins = 0
     for sc in scenarios:
         static = _serve(cfg, params, sc, adaptive=False)
         adaptive = _serve(cfg, params, sc, adaptive=True)
         saving = 1.0 - adaptive["ws_per_1k"] / max(static["ws_per_1k"], 1e-12)
         wins += adaptive["ws_per_1k"] < static["ws_per_1k"]
-        record["scenarios"][sc] = {"static": static, "adaptive": adaptive,
-                                   "ws_per_1k_saving": saving}
+        scenario_records[sc] = {"static": static, "adaptive": adaptive,
+                                "ws_per_1k_saving": saving}
         rows.append((
             f"serving_{sc}", adaptive["wall_s"] * 1e6,
             f"static={static['ws_per_1k']:.1f}Ws/1k "
@@ -157,15 +158,26 @@ def run(json_path=None) -> list[tuple]:
     rows.append(("serving_cache_resweep", (time.perf_counter() - t0) * 1e6,
                  f"new_measurements={resweep_meas} across "
                  f"{len(scenarios)} re-served scenarios (persistent cache)"))
-    record["resweep_new_measurements"] = resweep_meas
-    record["adaptive_wins"] = wins
 
     if json_path:
-        d = os.path.dirname(json_path)
-        if d:
-            os.makedirs(d, exist_ok=True)
-        with open(json_path, "w", encoding="utf-8") as fh:
-            json.dump(record, fh, indent=2, sort_keys=True)
+        # aggregate eval-cache traffic over every adaptive serve in the run
+        totals = cache_stats_json(None)
+        for rec in scenario_records.values():
+            for k in ("lookups", "hits", "cross_cell_hits", "inserts"):
+                totals[k] += rec["adaptive"]["cache"][k]
+        totals["hit_rate"] = (totals["hits"] / totals["lookups"]
+                              if totals["lookups"] else 0.0)
+        write_artifact(json_path, artifact(
+            "serving_bench",
+            scenarios=scenario_records,
+            metrics={
+                "arch": ARCH,
+                "mesh_options": [dict(m) for m in MESH_OPTIONS],
+                "adaptive_wins": wins,
+                "scenario_count": len(scenarios),
+                "resweep_new_measurements": resweep_meas,
+            },
+            cache=totals))
     return rows
 
 

@@ -166,10 +166,19 @@ class HimenoApp:
         gosa = 0.0
         for _ in range(self.iters):
             if budget_s and time.perf_counter() - t0 > budget_s:
-                return Measurement(time_s=time.perf_counter() - t0,
-                                   energy_ws=0.0, timed_out=True,
-                                   avg_watts=self.power.p_cpu,
-                                   detail={"placement": dict(placement)})
+                # Truncated runs report through the same power path as
+                # completed runs: real t_device so far, modeled energy and
+                # average watts over the measured wall time — not a zero
+                # energy that would make the timeout *cheaper* than running.
+                t_total = time.perf_counter() - t0
+                return Measurement(
+                    time_s=t_total,
+                    energy_ws=self.power.energy(t_total, t_device),
+                    timed_out=True,
+                    avg_watts=self.power.average_watts(t_total, t_device),
+                    detail={"t_device": t_device,
+                            "placement": dict(placement),
+                            "truncated": True})
             # u8: stencil
             dev = on_dev("jacobi_stencil")
             p = place(p, dev)
@@ -205,7 +214,8 @@ class HimenoApp:
             time_s=t_total, energy_ws=energy,
             avg_watts=self.power.average_watts(t_total, t_device),
             detail={"gosa": float(gosa), "final_residual": float(final),
-                    "t_device": t_device, "placement": dict(placement)})
+                    "t_device": t_device, "placement": dict(placement),
+                    "truncated": False})
 
     def verify_numerics(self) -> float:
         """|gosa_all_cpu - gosa_all_device| — placement must not change math."""

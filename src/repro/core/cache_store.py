@@ -82,11 +82,31 @@ class CacheStore:
         self.path = path
         self._lock = threading.Lock()
         self._fh = None
+        self.dropped_on_load = 0  # duplicate/torn lines seen by the last load
 
-    def load(self) -> dict[str, tuple[str, Measurement]]:
+    def load(self, *, compact: bool = False
+             ) -> dict[str, tuple[str, Measurement]]:
         """All decodable records, last-writer-wins per key (duplicates can
-        only carry identical measurements, so the order is immaterial)."""
+        only carry identical measurements, so the order is immaterial).
+
+        ``compact=True`` additionally rewrites the file once — one line per
+        surviving key, superseded duplicates and torn lines dropped — when
+        the load found anything to drop. Two appenders racing on one key
+        (the cache's at-most-twice fleet-wide case) and repeated crash-torn
+        tails otherwise grow a long-lived ``results/`` file without bound
+        across re-sweeps. The rewrite is write-temp-then-rename, so a crash
+        mid-compaction leaves either the old or the new file, never a mix.
+
+        Compaction assumes no OTHER process is appending at the same
+        instant: a concurrent appender's lines written after this read are
+        dropped by the rename, and its open handle keeps writing to the
+        unlinked inode. That costs re-measurements, never correctness
+        (every record is reproducible), but callers that do run concurrent
+        writers should construct ``PersistentEvalCache(..., compact=False)``
+        and compact offline.
+        """
         entries: dict[str, tuple[str, Measurement]] = {}
+        lines = 0
         if not os.path.exists(self.path):
             return entries
         with open(self.path, "r", encoding="utf-8") as fh:
@@ -94,13 +114,34 @@ class CacheStore:
                 line = line.strip()
                 if not line:
                     continue
+                lines += 1
                 try:
                     rec = json.loads(line)
                     entries[rec["key"]] = (rec.get("cell", ""),
                                            measurement_from_json(rec["m"]))
                 except (json.JSONDecodeError, KeyError, TypeError):
                     continue  # torn/foreign line: skip, re-measure later
+        self.dropped_on_load = lines - len(entries)
+        if compact and self.dropped_on_load > 0:
+            self._rewrite(entries)
         return entries
+
+    def _rewrite(self, entries: dict[str, tuple[str, Measurement]]) -> None:
+        tmp = self.path + ".compact.tmp"
+        with self._lock:
+            if self._fh is not None:  # reopen after the swap
+                self._fh.close()
+                self._fh = None
+            with open(tmp, "w", encoding="utf-8") as fh:
+                for key, (cell, m) in entries.items():
+                    fh.write(json.dumps({"key": key, "cell": cell,
+                                         "m": measurement_to_json(m)}) + "\n")
+            os.replace(tmp, self.path)
+
+    def compact(self) -> int:
+        """Deduplicate the file in place; returns the lines dropped."""
+        self.load(compact=True)
+        return self.dropped_on_load
 
     def append(self, key: str, cell: str, m: Measurement) -> None:
         line = json.dumps({"key": key, "cell": cell,
@@ -132,15 +173,19 @@ class PersistentEvalCache(EvalCache):
     and every ``search_fleet`` sweep in every process shares one measurement
     history. Preloaded entries do not count as inserts, so a re-sweep's
     ``FleetResult.evaluations`` is exactly the number of *new* measurements
-    (0 for a repeat sweep)."""
+    (0 for a repeat sweep). Construction compacts the append-only file when
+    it has accumulated superseded duplicates or torn lines (``compact=False``
+    opts out), so long-lived caches stop growing unboundedly across
+    re-sweeps."""
 
-    def __init__(self, path: str, *, store: Optional[CacheStore] = None
-                 ) -> None:
+    def __init__(self, path: str, *, store: Optional[CacheStore] = None,
+                 compact: bool = True) -> None:
         super().__init__()
         self.store = store or CacheStore(path)
-        loaded = self.store.load()
+        loaded = self.store.load(compact=compact)
         self.preload(loaded)
         self.preloaded = len(loaded)
+        self.compacted_lines = self.store.dropped_on_load if compact else 0
 
     def _key(self, key: Hashable) -> str:
         return key if isinstance(key, str) else stable_key(key)

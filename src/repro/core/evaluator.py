@@ -204,6 +204,46 @@ class VectorizedExecutor:
 # ---------------------------------------------------------------------------
 
 
+# ---------------------------------------------------------------------------
+# Measurement-backend registry
+# ---------------------------------------------------------------------------
+
+# Fleet cells default to the analytic cost model; named backends let a
+# CellSpec opt into a different verification environment (compile-backed,
+# metered, hardware probe) while still evaluating through the shared engine
+# and cache. A factory is called with the cell's resolved context — for LM
+# cells: (cfg, shape, mesh_shape, power) — and returns the cell's measure
+# function. Registration is process-global so benchmark drivers and the
+# telemetry layer can contribute backends without core importing them.
+BackendFactory = Callable[..., MeasureFn]
+_BACKENDS: dict[str, BackendFactory] = {}
+_BACKENDS_LOCK = threading.Lock()
+
+
+def register_backend(name: str, factory: BackendFactory, *,
+                     overwrite: bool = False) -> None:
+    """Register a named measurement-backend factory for fleet cells."""
+    with _BACKENDS_LOCK:
+        if not overwrite and name in _BACKENDS and _BACKENDS[name] is not factory:
+            raise ValueError(f"backend {name!r} already registered")
+        _BACKENDS[name] = factory
+
+
+def get_backend(name: str) -> BackendFactory:
+    with _BACKENDS_LOCK:
+        try:
+            return _BACKENDS[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown measurement backend {name!r}; registered: "
+                f"{sorted(_BACKENDS)}") from None
+
+
+def backend_names() -> list[str]:
+    with _BACKENDS_LOCK:
+        return sorted(_BACKENDS)
+
+
 @dataclass
 class EvalEngine:
     """Deduplicating batch dispatcher: cache lookups first, then one executor

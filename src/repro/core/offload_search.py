@@ -166,13 +166,14 @@ def search_lm_cell(
         ga_cfg = replace(ga_cfg, seed=ga_cfg.seed + ga_seed)
 
     zero = space.encode({})
-    if analytic:
-        # paper-faithful baseline, routed through the engine: it shares its
-        # cache entry with the GA's all-defaults seed genome
-        [baseline], _, _ = eng.evaluate(cell, [zero], measure_bits,
-                                        canonical=canonical)
-    else:
-        baseline = measure(Decisions())
+    # paper-faithful baseline (the all-defaults genome), routed through the
+    # engine for EVERY backend: it shares its cache entry with the GA's
+    # zero seed genome, and — for backend cells with a stable ``cell``
+    # label — with previous sweeps, so a re-sweep of an expensive
+    # (compile-/meter-/hardware-backed) cell really performs zero new
+    # measurements, baseline included.
+    [baseline], _, _ = eng.evaluate(cell, [zero], measure_bits,
+                                    canonical=canonical)
     result = run_ga(space, measure_bits, ga_cfg, seed_genomes=(zero,),
                     engine=eng, cell=cell, canonical=canonical)
 
@@ -197,20 +198,28 @@ def search_lm_cell(
 class CellSpec:
     """One fleet cell: (arch × shape × mesh), plus a GA restart seed so a
     fleet can include multi-start searches of the same cell (restarts share
-    all measurements through the semantic cache)."""
+    all measurements through the semantic cache). ``backend`` names a
+    registered measurement backend (:func:`~repro.core.evaluator.
+    register_backend`); None means the analytic cost model. Backend-keyed
+    cells get a stable ``@backend`` cache namespace, so re-sweeping the same
+    backend-backed cell hits the shared (possibly disk-persisted) cache —
+    model-, compile- and meter-backed cells coexist in one fleet."""
 
     arch: str
     shape: ShapeSpec
     mesh: tuple[tuple[str, int], ...]  # sorted (axis, size) items
     seed: int = 0
+    backend: Optional[str] = None
 
     @staticmethod
     def create(arch: str, shape: Union[str, ShapeSpec],
-               mesh_shape: dict[str, int], seed: int = 0) -> "CellSpec":
+               mesh_shape: dict[str, int], seed: int = 0,
+               backend: Optional[str] = None) -> "CellSpec":
         if isinstance(shape, str):
             from repro.configs import SHAPES
             shape = SHAPES[shape]
-        return CellSpec(arch, shape, tuple(sorted(mesh_shape.items())), seed)
+        return CellSpec(arch, shape, tuple(sorted(mesh_shape.items())), seed,
+                        backend)
 
     @property
     def mesh_shape(self) -> dict[str, int]:
@@ -219,8 +228,9 @@ class CellSpec:
     @property
     def key(self) -> str:
         from repro.configs import get_config
-        return lm_cell_key(get_config(self.arch), self.shape, self.mesh_shape,
-                           seed=self.seed)
+        key = lm_cell_key(get_config(self.arch), self.shape, self.mesh_shape,
+                          seed=self.seed)
+        return f"{key}@{self.backend}" if self.backend else key
 
 
 @dataclass
@@ -285,8 +295,15 @@ def search_fleet(
     def run_cell(spec: CellSpec) -> FleetCellResult:
         t0 = time.perf_counter()
         cfg = get_config(spec.arch)
+        measure = cell_label = None
+        if spec.backend:
+            from repro.core.evaluator import get_backend
+            measure = get_backend(spec.backend)(cfg, spec.shape,
+                                                spec.mesh_shape, power)
+            cell_label = spec.key  # stable: re-sweeps hit the shared cache
         res = search_lm_cell(cfg, spec.shape, spec.mesh_shape, ga_config,
-                             power=power, engine=eng, ga_seed=spec.seed)
+                             measure=measure, power=power, engine=eng,
+                             cell=cell_label, ga_seed=spec.seed)
         req = requirement
         if req is not None and req.min_speedup is not None \
                 and req.baseline_time_s is None:

@@ -148,6 +148,7 @@ class PlacementController:
         mesh_options: Sequence[dict[str, int]],
         *,
         cache_path: Optional[str] = "results/eval_cache.jsonl",
+        cache_compact: bool = True,
         eval_engine: Optional[EvalEngine] = None,
         ga_config: Optional[GAConfig] = None,
         requirement: Optional[UserRequirement] = None,
@@ -157,6 +158,8 @@ class PlacementController:
         interval_waves: int = 4,
         min_kind_weight: float = 0.02,
         prefer: str = "energy",
+        drift_threshold: float = 0.2,
+        calibrate_ledger: bool = True,
     ) -> None:
         if not mesh_options:
             raise ValueError("need at least one candidate destination mesh")
@@ -166,8 +169,16 @@ class PlacementController:
         self.mesh_options = [dict(m) for m in mesh_options]
         if eval_engine is None:
             if cache_path:
-                eval_engine = EvalEngine(executor=VectorizedExecutor(),
-                                         cache=PersistentEvalCache(cache_path))
+                # cache_compact=False is the safe setting when SEVERAL live
+                # processes share one cache file: construction-time
+                # compaction unlinks the file under a concurrent appender's
+                # open handle (see CacheStore.load); single-writer
+                # deployments keep the default and their results/ file
+                # stops accumulating duplicate/torn lines
+                eval_engine = EvalEngine(
+                    executor=VectorizedExecutor(),
+                    cache=PersistentEvalCache(cache_path,
+                                              compact=cache_compact))
             else:
                 eval_engine = EvalEngine(executor=VectorizedExecutor())
         self.eval_engine = eval_engine
@@ -179,9 +190,13 @@ class PlacementController:
         self.interval_waves = interval_waves
         self.min_kind_weight = min_kind_weight
         self.prefer = prefer
+        self.drift_threshold = drift_threshold
+        self.calibrate_ledger = calibrate_ledger
+        self.drift: dict[str, float] = {}  # kind -> (metered/modeled) - 1
         self.history: list[PlanReport] = []
         self._last_stats = engine.stats.snapshot()
         self._waves_since = 0
+        self._resweep_pending = False
 
     # -- wiring --------------------------------------------------------
     def attach(self) -> "PlacementController":
@@ -191,9 +206,38 @@ class PlacementController:
 
     def _on_wave_end(self, engine: ServingEngine) -> None:
         self._waves_since += 1
-        if self._waves_since >= self.interval_waves:
+        if self._resweep_pending or self._waves_since >= self.interval_waves:
             self._waves_since = 0
+            self._resweep_pending = False
             self.update()
+
+    # -- metered feedback (telemetry drift hook) -----------------------
+    def note_metered(self, kind: str, metered_ws_per_token: float) -> bool:
+        """Feed a *metered* Watt·s/token (telemetry/meter.py over live
+        traffic) back into the loop for one shape kind.
+
+        Two effects: the engine's energy ledger is recalibrated by the
+        metered/modeled ratio (so accumulated Watt·s track the measurement,
+        not the model), and when the drift exceeds ``drift_threshold`` a
+        re-sweep is scheduled for the next between-waves point regardless of
+        ``interval_waves`` — the model the current placement was chosen by
+        has been falsified by measurement, so the choice itself is suspect.
+        Returns True when a re-sweep was triggered.
+        """
+        p = self.engine.placements.get(kind)
+        if p is None or p.energy_per_token_ws <= 0.0 \
+                or metered_ws_per_token <= 0.0:
+            # a zero metered rate is a failed/empty measurement, not a free
+            # placement — correcting the ledger by 0 would stop it entirely
+            return False
+        ratio = metered_ws_per_token / p.energy_per_token_ws
+        self.drift[kind] = ratio - 1.0
+        if self.calibrate_ledger:
+            self.engine.energy_correction[kind] = ratio
+        if abs(ratio - 1.0) > self.drift_threshold:
+            self._resweep_pending = True
+            return True
+        return False
 
     # -- observe -------------------------------------------------------
     def observe(self) -> TrafficMix:
@@ -331,4 +375,11 @@ class PlacementController:
         if report.placements:
             self.engine.reconfigure({**self.engine.placements,
                                      **report.placements})
+            for kind in report.placements:
+                # a fresh placement resets the metered feedback: the old
+                # correction ratio belonged to the placement it was measured
+                # against, and applying it to the new one would skew the
+                # ledger until the next note_metered
+                self.engine.energy_correction.pop(kind, None)
+                self.drift.pop(kind, None)
         return report

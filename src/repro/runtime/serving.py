@@ -121,6 +121,11 @@ class ServingEngine:
         self.rejected: list[Request] = []
         self.stats = EngineStats()
         self.placements: dict[str, Placement] = {}
+        # Metered calibration of the energy ledger: per-kind multiplicative
+        # corrections (metered / modeled Watt·s per token) applied by
+        # PlacementController.note_metered when telemetry disagrees with the
+        # model. 1.0 (absent) = trust the model.
+        self.energy_correction: dict[str, float] = {}
         self.on_wave_end: Optional[Callable[["ServingEngine"], None]] = None
         self._in_wave = False
         self._step = jax.jit(
@@ -164,7 +169,9 @@ class ServingEngine:
 
     def _token_energy(self, kind: str) -> float:
         p = self.placements.get(kind)
-        return p.energy_per_token_ws if p is not None else 0.0
+        if p is None:
+            return 0.0
+        return p.energy_per_token_ws * self.energy_correction.get(kind, 1.0)
 
     # ------------------------------------------------------------------
     def _run_wave(self, wave: list[Request]) -> None:

@@ -1,5 +1,6 @@
 """Disk persistence of the cross-cell EvalCache (core/cache_store.py)."""
 import json
+import os
 
 from repro.configs import SHAPES, get_config
 from repro.core.cache_store import (
@@ -101,3 +102,71 @@ def test_cache_store_duplicate_append_last_wins(tmp_path):
     store.append("k", "a", Measurement(1.0, 1.0))
     store.append("k", "a", Measurement(1.0, 1.0))
     assert len(store.load()) == 1
+
+
+# ---------------------------------------------------------------------------
+# Compaction (satellite: long-lived results/ files stop growing unboundedly)
+# ---------------------------------------------------------------------------
+
+
+def _count_lines(path):
+    with open(path, "r", encoding="utf-8") as fh:
+        return sum(1 for line in fh if line.strip())
+
+
+def test_compact_drops_duplicates_and_torn_lines(tmp_path):
+    path = str(tmp_path / "cache.jsonl")
+    store = CacheStore(path)
+    for _ in range(3):  # racing appenders wrote the same key three times
+        store.append("k1", "a", Measurement(1.0, 1.0))
+    store.append("k2", "b", Measurement(2.0, 2.0))
+    with open(path, "a", encoding="utf-8") as fh:
+        fh.write('{"key": "torn", "cell"\n')  # crash-torn tail
+    store.close()
+    assert _count_lines(path) == 5
+    dropped = CacheStore(path).compact()
+    assert dropped == 3  # two duplicate k1 lines + the torn line
+    assert _count_lines(path) == 2
+    entries = CacheStore(path).load()
+    assert set(entries) == {"k1", "k2"}
+    assert entries["k1"] == ("a", Measurement(1.0, 1.0))
+
+
+def test_compact_noop_on_clean_file(tmp_path):
+    path = str(tmp_path / "cache.jsonl")
+    store = CacheStore(path)
+    store.append("k1", "a", Measurement(1.0, 1.0))
+    store.close()
+    before = os.path.getmtime(path)
+    assert CacheStore(path).compact() == 0
+    assert os.path.getmtime(path) == before  # no rewrite happened
+    assert CacheStore(str(tmp_path / "missing.jsonl")).compact() == 0
+
+
+def test_persistent_cache_compacts_on_load_and_keeps_appending(tmp_path):
+    path = str(tmp_path / "cache.jsonl")
+    store = CacheStore(path)
+    for _ in range(4):
+        store.append("dup", "c", Measurement(1.0, 2.0))
+    store.close()
+    cache = PersistentEvalCache(path)
+    assert cache.compacted_lines == 3
+    assert cache.preloaded == 1
+    assert _count_lines(path) == 1
+    # inserts after compaction still append and survive a reload
+    cache.put("new", "c", Measurement(3.0, 4.0))
+    again = PersistentEvalCache(path)
+    assert again.compacted_lines == 0 and again.preloaded == 2
+    assert again.get("dup", "c") == Measurement(1.0, 2.0)
+    assert again.get("new", "c") == Measurement(3.0, 4.0)
+
+
+def test_persistent_cache_compaction_opt_out(tmp_path):
+    path = str(tmp_path / "cache.jsonl")
+    store = CacheStore(path)
+    store.append("dup", "c", Measurement(1.0, 2.0))
+    store.append("dup", "c", Measurement(1.0, 2.0))
+    store.close()
+    cache = PersistentEvalCache(path, compact=False)
+    assert cache.compacted_lines == 0 and cache.preloaded == 1
+    assert _count_lines(path) == 2  # file untouched

@@ -98,3 +98,26 @@ def test_measured_ga_small_budget(measured):
                                            seed=0))
     assert res.best.measurement.time_s > 0
     assert res.evaluations <= 24
+
+
+def test_budget_truncated_run_reports_through_power_path():
+    """A budget-exhausted run must report t_device and modeled energy the
+    same way a completed run does — not a free (0 W·s) timeout."""
+    app = HimenoApp(grid=(17, 17, 33), iters=50)
+    placement = {u: 1 for u in UNIT_NAMES}
+    app.run(placement)  # warm jit so the truncated run still does device work
+    m = app.run(placement, budget_s=1e-6)
+    assert m.timed_out
+    assert m.detail["truncated"] is True
+    assert m.detail["placement"] == placement
+    t_dev = m.detail["t_device"]
+    assert 0.0 <= t_dev <= m.time_s
+    # energy and average watts computed by the SAME model as completed runs
+    assert m.energy_ws == pytest.approx(app.power.energy(m.time_s, t_dev))
+    assert m.avg_watts == pytest.approx(
+        app.power.average_watts(m.time_s, t_dev))
+    assert m.energy_ws > 0.0
+    # a completed run carries the same detail keys (plus its results)
+    done = app.run(placement, budget_s=None)
+    assert done.detail["truncated"] is False
+    assert set(m.detail) <= set(done.detail) | {"truncated"}

@@ -28,6 +28,7 @@ class FakeEngine:
     def __init__(self):
         self.stats = EngineStats()
         self.placements = {}
+        self.energy_correction = {}
         self.on_wave_end = None
 
     def reconfigure(self, placements):
@@ -164,6 +165,91 @@ def test_repeat_plan_hits_persistent_cache(tmp_path):
     assert r2.new_measurements == 0
     assert {k: (p.destination, p.clock) for k, p in r2.placements.items()} \
         == {k: (p.destination, p.clock) for k, p in r1.placements.items()}
+
+
+# ---------------------------------------------------------------------------
+# Metered drift hook (telemetry feedback)
+# ---------------------------------------------------------------------------
+
+
+def test_note_metered_calibrates_ledger_without_resweep(tmp_path):
+    eng, ctrl = make_controller(tmp_path, interval_waves=100,
+                                drift_threshold=0.2)
+    eng.reconfigure(static_placements("llama3.2-3b", MESH0))
+    modeled = eng.placements["decode"].energy_per_token_ws
+    # 10% drift: below threshold -> ledger corrected, no re-sweep scheduled
+    assert ctrl.note_metered("decode", modeled * 1.1) is False
+    assert eng.energy_correction["decode"] == pytest.approx(1.1)
+    assert ctrl.drift["decode"] == pytest.approx(0.1)
+    before = len(ctrl.history)
+    ctrl._on_wave_end(eng)  # far from the 100-wave interval
+    assert len(ctrl.history) == before
+
+
+def test_note_metered_drift_triggers_off_interval_resweep(tmp_path):
+    eng, ctrl = make_controller(tmp_path, interval_waves=100,
+                                drift_threshold=0.2)
+    eng.reconfigure(static_placements("llama3.2-3b", MESH0))
+    modeled = eng.placements["decode"].energy_per_token_ws
+    # 50% drift: the model the placement was chosen by is falsified
+    assert ctrl.note_metered("decode", modeled * 1.5) is True
+    _traffic(eng, prefill=2, decode=398, slot_steps=400, active=400)
+    ctrl._on_wave_end(eng)  # wave 1 of 100 — but the drift forces a re-plan
+    assert len(ctrl.history) == 1
+    assert eng.placements["decode"].source == "adaptive"
+    # the pending flag is one-shot
+    ctrl._on_wave_end(eng)
+    assert len(ctrl.history) == 1
+
+
+def test_note_metered_ignores_unplaced_kind(tmp_path):
+    eng, ctrl = make_controller(tmp_path)
+    assert ctrl.note_metered("decode", 5.0) is False
+    assert "decode" not in eng.energy_correction
+
+
+def test_note_metered_rejects_zero_metered_rate(tmp_path):
+    """metered == 0 is a failed measurement, not a free placement: it must
+    not zero out the ledger or trigger a re-sweep."""
+    eng, ctrl = make_controller(tmp_path)
+    eng.reconfigure(static_placements("llama3.2-3b", MESH0))
+    assert ctrl.note_metered("decode", 0.0) is False
+    assert "decode" not in eng.energy_correction
+    assert "decode" not in ctrl.drift
+
+
+def test_replan_resets_stale_energy_correction(tmp_path):
+    """A re-sweep installs a new placement; the correction ratio measured
+    against the OLD placement must not keep scaling the new one."""
+    eng, ctrl = make_controller(tmp_path, interval_waves=100,
+                                drift_threshold=0.2)
+    eng.reconfigure(static_placements("llama3.2-3b", MESH0))
+    modeled = eng.placements["decode"].energy_per_token_ws
+    assert ctrl.note_metered("decode", modeled * 1.5) is True
+    assert eng.energy_correction["decode"] == pytest.approx(1.5)
+    _traffic(eng, prefill=2, decode=398, slot_steps=400, active=400)
+    ctrl._on_wave_end(eng)  # drift-forced re-plan replaces the placement
+    assert eng.placements["decode"].source == "adaptive"
+    assert "decode" not in eng.energy_correction
+    assert "decode" not in ctrl.drift
+
+
+def test_energy_correction_scales_serving_ledger():
+    from repro.runtime.serving import Placement
+
+    class Probe(ServingEngine):
+        def __init__(self):  # skip model setup; only the ledger is probed
+            self.placements = {}
+            self.energy_correction = {}
+
+    eng = Probe()
+    eng.placements["decode"] = Placement(
+        kind="decode", cell="c", destination="d", decisions=None, clock=1.0,
+        energy_per_token_ws=2.0)
+    assert eng._token_energy("decode") == pytest.approx(2.0)
+    eng.energy_correction["decode"] = 1.25
+    assert eng._token_energy("decode") == pytest.approx(2.5)
+    assert eng._token_energy("prefill") == 0.0
 
 
 # ---------------------------------------------------------------------------

@@ -113,6 +113,47 @@ def test_tpu_average_watts_bounds():
     assert pm.average_watts(1.0, 5.0, 5.0, 5.0) == pytest.approx(top)
 
 
+def test_tpu_energy_clamps_component_time_at_step():
+    """t_component > t_step must clamp: a component cannot be active longer
+    than the wall clock (forced-t_step callers hit this edge)."""
+    pm = TpuPowerModel()
+    clamped = pm.energy(2, 1.0, 5.0, 7.0, 9.0)
+    assert clamped == pytest.approx(
+        2 * (pm.p_idle + pm.p_mxu + pm.p_hbm + pm.p_ici))
+    # identical to passing the already-clamped times explicitly
+    assert clamped == pytest.approx(pm.energy(2, 1.0, 1.0, 1.0, 1.0))
+    # zero-duration step: no energy at all
+    assert pm.energy(2, 0.0, 5.0, 7.0, 9.0) == 0.0
+
+
+def test_roofline_energy_no_overlap_never_clamps():
+    """overlap=False: t_step = sum of the terms, so every component time is
+    ≤ t_step and the clamp must be inert — energy equals the raw
+    idle·t_step + Σ p_c·t_c sum exactly."""
+    pm = TpuPowerModel()
+    terms = RooflineTerms(flops=197e12 * 0.9, hbm_bytes=819e9 * 0.6,
+                          collective_bytes=50e9 * 0.3, chips=8)
+    t_step = terms.step_time(overlap=False)
+    assert t_step == pytest.approx(terms.t_compute + terms.t_memory
+                                   + terms.t_collective)
+    expect = 8 * (pm.p_idle * t_step + pm.p_mxu * terms.t_compute
+                  + pm.p_hbm * terms.t_memory + pm.p_ici * terms.t_collective)
+    assert terms.energy(pm, overlap=False) == pytest.approx(expect)
+
+
+def test_roofline_energy_overlap_clamp_is_inert_too():
+    """overlap=True: t_step = max of the terms, so min(t_c, t_step) == t_c
+    for every component — overlapped energy is the same component integral,
+    differing from no-overlap only through the idle term (shorter wall)."""
+    pm = TpuPowerModel()
+    terms = RooflineTerms(flops=197e12 * 0.9, hbm_bytes=819e9 * 0.6,
+                          collective_bytes=50e9 * 0.3, chips=8)
+    t_ov = terms.step_time(overlap=True)
+    expect = 8 * (pm.p_idle * t_ov + pm.p_mxu * terms.t_compute
+                  + pm.p_hbm * terms.t_memory + pm.p_ici * terms.t_collective)
+    assert terms.energy(pm, overlap=True) == pytest.approx(expect)
+
+
 def test_dvfs_clock_trades_time_for_energy():
     """The DVFS gene's premise, at model level: on a compute-bound cell a
     lower clock is slower but (f³ dynamic power × 1/f time) cheaper."""
