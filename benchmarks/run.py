@@ -19,6 +19,10 @@ Sections:
 ``--json-dir DIR`` writes the unified BENCH_*.json artifact
 (benchmarks/artifact.py: schema, bench, scenarios, metrics, cache) for
 every benchmark that produces one (fleet, serving, power).
+``--bench-out PATH`` writes the serving perf-trajectory artifact to an
+explicit path (CI: ``BENCH_serving.json`` at the repo root, uploaded per
+commit). ``--only a,b`` restricts the run to named sections
+(himeno, ga, fleet, serving, power, kernel, e2e, roofline).
 """
 from __future__ import annotations
 
@@ -28,63 +32,90 @@ import sys
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
+SECTIONS = ("himeno", "ga", "fleet", "serving", "power", "kernel", "e2e",
+            "roofline")
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json-dir", default=None,
                     help="directory for the per-benchmark BENCH_*.json "
                          "artifacts (unified schema)")
+    ap.add_argument("--bench-out", default=None,
+                    help="explicit path for the serving perf-trajectory "
+                         "artifact (e.g. BENCH_serving.json at the repo "
+                         "root; overrides --json-dir for serving)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated sections to run "
+                         f"(default: all of {','.join(SECTIONS)})")
     args = ap.parse_args()
     jd = args.json_dir
     if jd:
         os.makedirs(jd, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else set(SECTIONS)
+    unknown = only - set(SECTIONS)
+    if unknown:
+        ap.error(f"unknown --only sections: {sorted(unknown)}")
+    if args.bench_out and "serving" not in only:
+        ap.error("--bench-out writes the serving artifact; include "
+                 "'serving' in --only (or drop --only)")
 
     def art(name: str):
         return os.path.join(jd, f"BENCH_{name}.json") if jd else None
 
     rows: list[tuple] = []
 
-    from benchmarks import (
-        fleet_bench, ga_bench, himeno_bench, kernel_bench, power_bench,
-        serving_bench,
-    )
+    if "himeno" in only:
+        from benchmarks import himeno_bench
+        rows += himeno_bench.run()
+    if "ga" in only:
+        from benchmarks import ga_bench
+        rows += ga_bench.run()
+    if "fleet" in only:
+        from benchmarks import fleet_bench
+        rows += fleet_bench.run(json_path=art("fleet"))
+    if "serving" in only:
+        from benchmarks import serving_bench
+        rows += serving_bench.run(json_path=args.bench_out or art("serving"))
+    if "power" in only:
+        from benchmarks import power_bench
+        rows += power_bench.run(json_path=art("power"))
+    if "kernel" in only:
+        from benchmarks import kernel_bench
+        rows += kernel_bench.run()
 
-    rows += himeno_bench.run()
-    rows += ga_bench.run()
-    rows += fleet_bench.run(json_path=art("fleet"))
-    rows += serving_bench.run(json_path=art("serving"))
-    rows += power_bench.run(json_path=art("power"))
-    rows += kernel_bench.run()
+    if "e2e" in only:
+        # end-to-end drivers (reduced configs, CPU)
+        from repro.launch.serve import serve
+        from repro.launch.train import train
 
-    # end-to-end drivers (reduced configs, CPU)
-    import time
+        t = train("llama3.2-3b", use_reduced=True, steps=30, global_batch=4,
+                  seq_len=32, log_every=0)
+        rows.append(("e2e_train_30steps",
+                     t["wall_s"] * 1e6 / max(t["steps"], 1),
+                     f"loss {t['initial_loss']:.3f}->{t['final_loss']:.3f}"))
+        s = serve("llama3.2-3b", use_reduced=True, num_requests=4, slots=2,
+                  max_new_tokens=4)
+        rows.append(("e2e_serve_4req", s["wall_s"] * 1e6,
+                     f"{s['tokens_per_s']:.1f} tok/s steps={s['steps']}"))
 
-    from repro.launch.serve import serve
-    from repro.launch.train import train
+    if "roofline" in only:
+        # roofline summary (if the dry-run has produced records)
+        try:
+            from benchmarks.roofline import table
 
-    t = train("llama3.2-3b", use_reduced=True, steps=30, global_batch=4,
-              seq_len=32, log_every=0)
-    rows.append(("e2e_train_30steps", t["wall_s"] * 1e6 / max(t["steps"], 1),
-                 f"loss {t['initial_loss']:.3f}->{t['final_loss']:.3f}"))
-    s = serve("llama3.2-3b", use_reduced=True, num_requests=4, slots=2,
-              max_new_tokens=4)
-    rows.append(("e2e_serve_4req", s["wall_s"] * 1e6,
-                 f"{s['tokens_per_s']:.1f} tok/s waves={s['waves']}"))
-
-    # roofline summary (if the dry-run has produced records)
-    try:
-        from benchmarks.roofline import table
-
-        rl = table("results/dryrun")
-        for r in rl:
-            rows.append((f"roofline_{r.arch}_{r.shape}_{r.mesh}",
-                         r.step_time * 1e6,
-                         f"dom={r.dominant} useful={r.useful_ratio:.2f} "
-                         f"W={r.watts_per_chip:.0f} fit={'Y' if r.fits else 'N'}"))
-        if not rl:
-            rows.append(("roofline_records", 0.0, "no dry-run records yet"))
-    except Exception as e:  # records absent in fresh checkouts
-        rows.append(("roofline_records", 0.0, f"unavailable: {e}"))
+            rl = table("results/dryrun")
+            for r in rl:
+                rows.append((f"roofline_{r.arch}_{r.shape}_{r.mesh}",
+                             r.step_time * 1e6,
+                             f"dom={r.dominant} useful={r.useful_ratio:.2f} "
+                             f"W={r.watts_per_chip:.0f} "
+                             f"fit={'Y' if r.fits else 'N'}"))
+            if not rl:
+                rows.append(("roofline_records", 0.0,
+                             "no dry-run records yet"))
+        except Exception as e:  # records absent in fresh checkouts
+            rows.append(("roofline_records", 0.0, f"unavailable: {e}"))
 
     print("name,us_per_call,derived")
     for name, us, derived in rows:

@@ -1,14 +1,23 @@
-"""Serving benchmark: static vs traffic-adaptive placement (Watt·s / 1k tok).
+"""Serving benchmark: static vs traffic-adaptive placement (Watt·s / 1k tok)
+and the slot-stream vs wave scheduler comparison.
 
-Drives the wave-scheduled :class:`ServingEngine` under three traffic
-scenarios — prefill-heavy, decode-heavy, mixed-burst — twice each:
+Drives the :class:`ServingEngine` under three traffic scenarios —
+prefill-heavy, decode-heavy, mixed-burst — twice each on the legacy wave
+scheduler (keeping the PR-2/PR-3 trajectory comparable):
 
 * **static**   — the paper-faithful default placement (``Decisions()`` at
   nominal clock on the default mesh) for the whole run.
 * **adaptive** — the :class:`PlacementController` loop: observe the traffic
-  mix between waves, sweep the observed cells with ``search_fleet`` through
-  the disk-persisted measurement cache, narrow via the kind-level fleet
-  frontier + staged destination selection, reconfigure between waves.
+  mix, sweep the observed cells with ``search_fleet`` through the
+  disk-persisted measurement cache, narrow via the kind-level fleet
+  frontier + staged destination selection, reconfigure.
+
+A fourth **ragged-length** scenario pits the slot-stream scheduler against
+the wave scheduler on traffic with wildly mixed prompt/generation lengths —
+the case where wave barriers idle slots. It reports occupancy, steps and
+Watt·s/1k-tokens for both, checks the decoded outputs are token-identical
+(slot streams change scheduling, never tokens), and runs the slot-stream
+engine once more under the step-windowed adaptive controller.
 
 Reported metric is modeled Watt·s per 1k processed tokens (the paper's Fig.5
 quantity, normalized to traffic); the adaptive loop must not lose to static
@@ -19,7 +28,9 @@ that zero new measurements were needed (ROADMAP item 3: sweeps are
 incremental across processes).
 
 ``python benchmarks/serving_bench.py --json BENCH_serving.json`` writes the
-machine-readable trajectory record CI uploads as an artifact.
+machine-readable trajectory record CI uploads as an artifact
+(``benchmarks/run.py --bench-out`` writes the same record from the full
+harness).
 """
 from __future__ import annotations
 
@@ -70,42 +81,54 @@ def _requests(scenario: str):
                     reqs.append(Request(rid=rid, prompt=[2 + rid % 5, 4],
                                         max_new_tokens=10))
                 rid += 1
+    elif scenario == "ragged":  # wildly mixed lengths: wave barriers idle
+        for i in range(16):
+            plen = 2 + (i * 7) % 23
+            reqs.append(Request(rid=i,
+                                prompt=[1 + (i + j) % 17
+                                        for j in range(plen)],
+                                max_new_tokens=1 + (i * 5) % 12))
     else:
         raise ValueError(f"unknown scenario {scenario!r}")
     return reqs
 
 
 def _serve(cfg, params, scenario: str, *, adaptive: bool,
-           cache_path: str = CACHE_PATH):
+           scheduler: str = "wave", cache_path: str = CACHE_PATH,
+           collect_outputs: bool = False):
     from repro.core.ga import GAConfig
     from repro.runtime import (
         PlacementController, ServingEngine, static_placements,
     )
 
-    engine = ServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN)
+    engine = ServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                           scheduler=scheduler)
     engine.reconfigure(static_placements(ARCH, MESH_OPTIONS[0]))
     controller = None
     if adaptive:
         controller = PlacementController(
             engine, ARCH, MESH_OPTIONS, cache_path=cache_path,
             ga_config=GAConfig(population=10, generations=8, seed=0),
-            interval_waves=1).attach()
+            interval_waves=1, interval_steps=12).attach()
     for r in _requests(scenario):
         engine.submit(r)
     t0 = time.perf_counter()
     done = engine.run()
     wall = time.perf_counter() - t0
     s = engine.stats
-    return {
+    record = {
         "cache": (cache_stats_json(controller.eval_engine.cache.stats())
                   if controller else cache_stats_json(None)),
+        "scheduler": scheduler,
         "completed": len(done),
         "tokens": s.total_tokens,
         "energy_ws": s.energy_ws,
         "ws_per_1k": s.energy_ws / max(s.total_tokens, 1) * 1e3,
         "waves": s.waves,
+        "steps": s.steps,
         "reconfigurations": s.reconfigurations,
         "occupancy": s.occupancy,
+        "length_capped": s.length_capped,
         "new_measurements": (sum(r.new_measurements for r in controller.history)
                              if controller else 0),
         "placements": {k: {"destination": p.destination, "clock": p.clock,
@@ -114,6 +137,9 @@ def _serve(cfg, params, scenario: str, *, adaptive: bool,
                        for k, p in engine.placements.items()},
         "wall_s": wall,
     }
+    if collect_outputs:
+        record["outputs"] = {r.rid: list(r.output) for r in done}
+    return record
 
 
 def run(json_path=None) -> list[tuple]:
@@ -147,6 +173,37 @@ def run(json_path=None) -> list[tuple]:
                  f"adaptive beats static on {wins}/{len(scenarios)} scenarios"
                  f" (Watt·s per 1k tokens)"))
 
+    # ragged-length scenario: slot-stream vs wave scheduler on the same
+    # request set. Occupancy is the win; outputs must be token-identical and
+    # Watt·s/1k no worse. The stream engine then runs once more under the
+    # step-windowed adaptive controller.
+    wave_r = _serve(cfg, params, "ragged", adaptive=False, scheduler="wave",
+                    collect_outputs=True)
+    stream_r = _serve(cfg, params, "ragged", adaptive=False,
+                      scheduler="stream", collect_outputs=True)
+    stream_ad = _serve(cfg, params, "ragged", adaptive=True,
+                       scheduler="stream")
+    identical = wave_r["outputs"] == stream_r["outputs"]
+    occ_gain = stream_r["occupancy"] - wave_r["occupancy"]
+    ws_delta = stream_r["ws_per_1k"] - wave_r["ws_per_1k"]
+    scenario_records["ragged"] = {
+        "wave_static": wave_r, "stream_static": stream_r,
+        "stream_adaptive": stream_ad,
+        "outputs_identical": identical,
+        "occupancy_gain": occ_gain,
+        "ws_per_1k_delta": ws_delta,
+    }
+    rows.append(("serving_ragged_stream_vs_wave", stream_r["wall_s"] * 1e6,
+                 f"occ={wave_r['occupancy']:.2f}->{stream_r['occupancy']:.2f}"
+                 f" steps={wave_r['steps']}->{stream_r['steps']} "
+                 f"ws/1k={wave_r['ws_per_1k']:.1f}->"
+                 f"{stream_r['ws_per_1k']:.1f} identical={identical}"))
+    rows.append(("serving_ragged_adaptive_stream", stream_ad["wall_s"] * 1e6,
+                 f"static={stream_r['ws_per_1k']:.1f}Ws/1k "
+                 f"adaptive={stream_ad['ws_per_1k']:.1f}Ws/1k "
+                 f"occ={stream_ad['occupancy']:.2f} "
+                 f"reconfigs={stream_ad['reconfigurations']}"))
+
     # persisted cache: every scenario re-planned from a FRESH cache over the
     # same results file must need zero new measurements (cross-process
     # incrementality, ROADMAP item 3)
@@ -155,16 +212,24 @@ def run(json_path=None) -> list[tuple]:
     for sc in scenarios:
         again = _serve(cfg, params, sc, adaptive=True)
         resweep_meas += again["new_measurements"]
+    # the step-windowed slot-stream path must be incremental too: its cell
+    # keys are as deterministic as the wave path's
+    again = _serve(cfg, params, "ragged", adaptive=True, scheduler="stream")
+    resweep_meas += again["new_measurements"]
     rows.append(("serving_cache_resweep", (time.perf_counter() - t0) * 1e6,
                  f"new_measurements={resweep_meas} across "
-                 f"{len(scenarios)} re-served scenarios (persistent cache)"))
+                 f"{len(scenarios) + 1} re-served scenarios "
+                 f"(persistent cache)"))
 
     if json_path:
         # aggregate eval-cache traffic over every adaptive serve in the run
         totals = cache_stats_json(None)
-        for rec in scenario_records.values():
+        adaptive_runs = [rec["adaptive"] for rec in scenario_records.values()
+                         if "adaptive" in rec]
+        adaptive_runs.append(scenario_records["ragged"]["stream_adaptive"])
+        for run_rec in adaptive_runs:
             for k in ("lookups", "hits", "cross_cell_hits", "inserts"):
-                totals[k] += rec["adaptive"]["cache"][k]
+                totals[k] += run_rec["cache"][k]
         totals["hit_rate"] = (totals["hits"] / totals["lookups"]
                               if totals["lookups"] else 0.0)
         write_artifact(json_path, artifact(
@@ -176,6 +241,9 @@ def run(json_path=None) -> list[tuple]:
                 "adaptive_wins": wins,
                 "scenario_count": len(scenarios),
                 "resweep_new_measurements": resweep_meas,
+                "ragged_outputs_identical": identical,
+                "ragged_occupancy_gain": occ_gain,
+                "ragged_ws_per_1k_delta": ws_delta,
             },
             cache=totals))
     return rows

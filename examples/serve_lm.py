@@ -1,5 +1,6 @@
-"""Serving example: batched requests through the wave-scheduled engine,
-across three architecture families (dense, SSM, MoE) with one code path.
+"""Serving example: batched requests through the slot-stream engine
+(continuous batching with per-slot position streams), across three
+architecture families (dense, SSM, MoE) with one code path.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -24,7 +25,8 @@ def main():
                                   max_new_tokens=6))
         done = engine.run()
         s = engine.stats
-        print(f"{arch:<16} served={len(done)} waves={s.waves} "
+        print(f"{arch:<16} served={len(done)} steps={s.steps} "
+              f"occupancy={s.occupancy:.2f} "
               f"decode_tokens={s.decode_tokens} "
               f"sample_output={done[0].output}")
 

@@ -1,8 +1,10 @@
-"""Serving driver: batched requests through the wave-scheduled engine.
+"""Serving driver: batched requests through the slot-stream engine
+(``--scheduler wave`` falls back to the legacy wave scheduler).
 
 ``--adaptive`` attaches the traffic-adaptive placement controller
 (runtime/placement.py): the engine starts on the static paper-faithful
-placement and re-plans between waves from the observed traffic mix, through
+placement and re-plans from the observed traffic mix — on a step-count
+window under slot streams, between waves under the wave scheduler — through
 the disk-persisted measurement cache under ``results/``.
 """
 from __future__ import annotations
@@ -27,12 +29,14 @@ def serve(arch: str = "llama3.2-3b", *, use_reduced: bool = True,
           num_requests: int = 8, slots: int = 4, max_new_tokens: int = 8,
           max_len: int = 64, adaptive: bool = False,
           cache_path: Optional[str] = "results/eval_cache.jsonl",
-          interval_waves: int = 1) -> dict:
+          interval_waves: int = 1, interval_steps: int = 16,
+          scheduler: str = "stream") -> dict:
     cfg = get_config(arch)
     if use_reduced:
         cfg = reduce_cfg(cfg)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    engine = ServingEngine(cfg, params, slots=slots, max_len=max_len)
+    engine = ServingEngine(cfg, params, slots=slots, max_len=max_len,
+                           scheduler=scheduler)
     # modeled production-cell energy rates (full config, not the reduced one
     # actually decoding locally): the Watt·s ledger the search minimizes
     engine.reconfigure(static_placements(arch, DEFAULT_MESH))
@@ -41,7 +45,8 @@ def serve(arch: str = "llama3.2-3b", *, use_reduced: bool = True,
         controller = PlacementController(
             engine, arch, DEFAULT_MESH_OPTIONS, cache_path=cache_path,
             ga_config=GAConfig(population=10, generations=8),
-            interval_waves=interval_waves).attach()
+            interval_waves=interval_waves,
+            interval_steps=interval_steps).attach()
     for i in range(num_requests):
         engine.submit(Request(rid=i, prompt=[1 + i % 7, 2, 3 + i % 5],
                               max_new_tokens=max_new_tokens))
@@ -57,6 +62,8 @@ def serve(arch: str = "llama3.2-3b", *, use_reduced: bool = True,
         "wall_s": wall,
         "tokens_per_s": toks / max(wall, 1e-9),
         "waves": engine.stats.waves,
+        "steps": engine.stats.steps,
+        "occupancy": engine.stats.occupancy,
         "energy_ws": engine.stats.energy_ws,
         "ws_per_1k_tokens": engine.stats.energy_ws / max(total, 1) * 1e3,
         "reconfigurations": engine.stats.reconfigurations,
@@ -76,16 +83,22 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--scheduler", default="stream",
+                    choices=("stream", "wave"),
+                    help="slot-stream continuous batching (default) or the "
+                         "legacy wave scheduler")
     ap.add_argument("--adaptive", action="store_true",
                     help="traffic-adaptive placement (observe/sweep/narrow/"
-                         "reconfigure between waves)")
+                         "reconfigure on a step-count window, or between "
+                         "waves under --scheduler wave)")
     args = ap.parse_args()
     out = serve(args.arch, use_reduced=not args.full,
                 num_requests=args.requests, slots=args.slots,
-                max_new_tokens=args.max_new_tokens, adaptive=args.adaptive)
+                max_new_tokens=args.max_new_tokens, adaptive=args.adaptive,
+                scheduler=args.scheduler)
     print(f"served {out['completed']} requests, {out['decode_tokens']} tokens "
           f"in {out['wall_s']:.2f}s ({out['tokens_per_s']:.1f} tok/s, "
-          f"{out['waves']} waves)")
+          f"{out['steps']} steps, occupancy {out['occupancy']:.2f})")
     print(f"modeled energy: {out['energy_ws']:.0f} Ws "
           f"({out['ws_per_1k_tokens']:.0f} Ws/1k tokens), "
           f"{out['reconfigurations']} reconfigurations, "

@@ -7,6 +7,7 @@ from repro.models.transformer import (
     init_params,
     model_defs,
     param_specs,
+    reset_decode_slots,
 )
 from repro.models.inputs import batch_logical_axes, input_specs, synthetic_batch
 
@@ -19,6 +20,7 @@ __all__ = [
     "init_params",
     "model_defs",
     "param_specs",
+    "reset_decode_slots",
     "batch_logical_axes",
     "input_specs",
     "synthetic_batch",

@@ -200,7 +200,10 @@ def decode_attention(
     kv_memory: Optional[tuple[jax.Array, jax.Array]] = None,
     rope: bool = True,
 ) -> tuple[jax.Array, dict]:
-    """x: (B, 1, D); pos: scalar current position. Returns (out, new_cache).
+    """x: (B, 1, D); pos: current position — a scalar (one shared position
+    stream) or a (B,) vector (per-slot position streams: each batch row
+    carries its own stream, so continuous-batching slots never alias cache
+    positions across the requests sharing a slot). Returns (out, new_cache).
 
     The cache sequence axis is sharded ("kv_seq"); softmax statistics combine
     across shards via GSPMD all-reduce (flash-decode style SP).
@@ -208,10 +211,11 @@ def decode_attention(
     b = x.shape[0]
     hd = cfg.resolved_head_dim
     scale = hd ** -0.5
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
 
     q = _project_q(cfg, p, x)
     if rope:
-        q = apply_rope(q, pos[None], cfg.rope_theta)
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
 
     if kv_memory is not None:  # cross-attention: static precomputed memory
         k, v = kv_memory
@@ -220,13 +224,12 @@ def decode_attention(
     else:
         k_new, v_new = _project_kv(cfg, p, x)
         if rope:
-            k_new = apply_rope(k_new, pos[None], cfg.rope_theta)
+            k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
         length = cache["k"].shape[1]
         slot = (pos % length) if window else pos
-        k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                         (0, slot, 0, 0))
-        v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                         (0, slot, 0, 0))
+        rows = jnp.arange(b)
+        k = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+        v = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
         k = shard_act(k, ("kv_batch", "kv_seq", "act_kv_heads", None), essential=True)
         v = shard_act(v, ("kv_batch", "kv_seq", "act_kv_heads", None), essential=True)
         new_cache = {"k": k, "v": v}
@@ -234,9 +237,12 @@ def decode_attention(
         if window:
             # ring buffer: once wrapped, every slot holds one of the last
             # `length` positions; before wrapping only slots <= pos are live.
-            mask = ((idx <= pos) | (pos >= length))[None, None, None, :]
+            mask = (idx[None, :] <= pos[:, None]) | (pos[:, None] >= length)
         else:
-            mask = (idx <= pos)[None, None, None, :]
+            # per-row causality doubles as slot-reset hygiene: rows whose
+            # stream restarted at 0 can only see cache entries they have
+            # (re)written since the reset.
+            mask = idx[None, :] <= pos[:, None]
 
     # grouped GQA: no materialized head-repeat of the cache (a full extra
     # cache-sized copy per step when heads/kv_heads is large, e.g. grok's 6x)
@@ -245,8 +251,8 @@ def decode_attention(
     qg = q.reshape(b, q.shape[1], kh, g, hd)
     scores = jnp.einsum("bqkgd,btkd->bkgqt", qg, k).astype(jnp.float32) * scale
     if mask is not None:
-        # mask: (1,1,1,T) -> align with (b, kh, g, 1, T)
-        scores = jnp.where(mask[:, :, :, None, :], scores, NEG_INF)
+        # mask: (B, T) -> align with (b, kh, g, 1, T)
+        scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
     out = jnp.einsum("bkgqt,btkd->bqkgd", probs, v)
     out = out.reshape(b, q.shape[1], cfg.num_heads, hd)

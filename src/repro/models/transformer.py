@@ -347,7 +347,11 @@ def forward_loss(cfg: ArchConfig, params: dict, batch: dict, *,
 
 
 def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
-    state: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    # "pos" is a (batch,) vector: every slot carries its OWN position stream
+    # so a serving slot can be reset (reset_decode_slots) and re-admitted
+    # mid-stream without aliasing cache positions across requests. Uniform
+    # values reproduce the legacy single-stream behavior exactly.
+    state: dict[str, Any] = {"pos": jnp.zeros((batch,), jnp.int32)}
     if cfg.family == "ssm":
         per = rwkv_mod.init_rwkv_state(cfg, batch)
         state["rwkv"] = jax.tree.map(
@@ -384,7 +388,7 @@ def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int) -> dict:
 def decode_state_logical_axes(cfg: ArchConfig, state: dict) -> dict:
     """Logical sharding axes mirroring init_decode_state's structure."""
     kv_axes = ("layers",) + attn.cache_logical_axes()["k"]
-    out: dict[str, Any] = {"pos": ()}
+    out: dict[str, Any] = {"pos": (None,)}  # (batch,) vector, replicated
     if cfg.family == "ssm":
         out["rwkv"] = {
             "wkv": ("layers", "batch", "rwkv_heads", None, None),
@@ -407,10 +411,70 @@ def decode_state_logical_axes(cfg: ArchConfig, state: dict) -> dict:
     return out
 
 
+def reset_decode_slots(cfg: ArchConfig, state: dict, reset_mask) -> dict:
+    """Masked per-slot reset: slots where ``reset_mask`` is True restart
+    their position stream at 0 with fresh recurrent state, WITHOUT touching
+    the other slots — the admission primitive of slot-stream continuous
+    batching (a freed slot takes a new request while its neighbors keep
+    decoding).
+
+    KV caches are deliberately NOT cleared: ``decode_attention``'s per-row
+    causal mask only exposes cache rows a slot has written since its last
+    reset (``idx <= pos``), so the previous occupant's entries are
+    unreachable and each row is overwritten before it becomes visible —
+    including the sliding-window ring buffer, whose "fully wrapped" clause
+    only unlocks after the new stream has itself written the whole ring.
+    Recurrent families (RWKV / Mamba / hybrid) carry history densely in
+    their state, so those leaves ARE re-initialized under the mask; the
+    per-request encoder memory of enc-dec models is cleared for the same
+    reason.
+    """
+    reset = jnp.asarray(reset_mask, bool)
+    batch = reset.shape[0]
+
+    def sel(old, fresh):
+        # batch axis is axis 1 on every stacked state leaf
+        m = reset.reshape((1, batch) + (1,) * (old.ndim - 2))
+        return jnp.where(m, fresh.astype(old.dtype), old)
+
+    new_state = dict(state)
+    new_state["pos"] = jnp.where(reset, 0, state["pos"])
+    if cfg.family == "ssm":
+        per = rwkv_mod.init_rwkv_state(cfg, batch)
+        fresh = jax.tree.map(
+            lambda v: jnp.broadcast_to(v[None], (cfg.num_layers,) + v.shape),
+            per)
+        new_state["rwkv"] = jax.tree.map(sel, state["rwkv"], fresh)
+    elif cfg.family == "hybrid":
+        ng, tail = hybrid_groups(cfg)
+        m0 = ssm_mod.init_ssm_state(cfg, batch)
+
+        def rep(v, n):
+            return jnp.broadcast_to(v[None], (n,) + v.shape)
+
+        fresh = jax.tree.map(lambda v: rep(v, ng * cfg.attn_every), m0)
+        new_state["mamba"] = jax.tree.map(sel, state["mamba"], fresh)
+        if "mamba_tail" in state:
+            fresh_t = jax.tree.map(lambda v: rep(v, tail), m0)
+            new_state["mamba_tail"] = jax.tree.map(sel, state["mamba_tail"],
+                                                   fresh_t)
+    elif cfg.is_encdec:
+        new_state["cross_k"] = sel(state["cross_k"],
+                                   jnp.zeros_like(state["cross_k"]))
+        new_state["cross_v"] = sel(state["cross_v"],
+                                   jnp.zeros_like(state["cross_v"]))
+    return new_state
+
+
 def decode_step(cfg: ArchConfig, params: dict, state: dict, tokens: jax.Array
                 ) -> tuple[jax.Array, dict]:
-    """tokens: (B,) int32 — one step. Returns (logits (B, V), new_state)."""
-    pos = state["pos"]
+    """tokens: (B,) int32 — one step. Returns (logits (B, V), new_state).
+
+    ``state["pos"]`` is a per-slot (B,) position vector (a legacy scalar is
+    broadcast); each batch row attends within its own stream only.
+    """
+    pos = jnp.broadcast_to(jnp.asarray(state["pos"], jnp.int32),
+                           (tokens.shape[0],))
     x = L.embed_tokens(cfg, params["embedding"], tokens[:, None])
     new_state: dict[str, Any] = {"pos": pos + 1}
 

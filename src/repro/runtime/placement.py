@@ -7,9 +7,13 @@ than to a hand-chosen offline cell. The controller closes that loop:
 
 1. **observe** — snapshot the :class:`~repro.runtime.serving.EngineStats`
    delta since the last sweep: the traffic mix over shape kinds
-   (prefill vs decode token shares) and the batch occupancy of the wave
-   scheduler. Occupancy is quantized into quarter buckets so observed cells
-   form a small stable set and the measurement cache stays hot.
+   (prefill vs decode token shares), the batch occupancy of the scheduler,
+   and the tightest per-step time budget implied by pending request SLOs.
+   Occupancy is quantized into quarter buckets so observed cells form a
+   small stable set and the measurement cache stays hot. Under the
+   slot-stream scheduler the window is a **step count** (``interval_steps``
+   via the engine's ``on_step_end`` hook — there are no wave boundaries);
+   under the wave scheduler it stays ``interval_waves``.
 2. **sweep** — map the observed mix to fleet cells (arch × bucketed shape ×
    candidate destination mesh) and run
    :func:`~repro.core.offload_search.search_fleet` over them through an
@@ -24,11 +28,14 @@ than to a hand-chosen offline cell. The controller closes that loop:
    select_destination`) over the surviving destinations in cheap-to-expensive
    order. The user requirement (default: "no worse Watt·s than the cell's
    paper-faithful baseline") early-exits on the first satisfying
-   destination; the chosen pattern fixes cell, destination *and* the DVFS
-   clock gene jointly.
-4. **reconfigure** — apply the chosen :class:`Placement`s to the engine via
-   its between-waves hook (never mid-wave); subsequent traffic is costed at
-   the new operating point's Watt·s per token.
+   destination; when the observed traffic carries request SLOs the implied
+   per-step time budget joins as ``max_time_s`` (multi-requirement §3.3:
+   time SLO and energy jointly, as in mixed-destination selection). The
+   chosen pattern fixes cell, destination *and* the DVFS clock gene jointly.
+4. **reconfigure** — apply the chosen :class:`Placement`s to the engine.
+   Under slot streams the swap applies to newly admitted slots (in-flight
+   requests keep their admission epoch), so it is safe mid-run; the wave
+   scheduler keeps the between-waves-only rule.
 
 ``benchmarks/serving_bench.py`` drives this loop under prefill-heavy,
 decode-heavy and mixed-burst traffic and reports Watt·s per 1k tokens
@@ -80,6 +87,10 @@ class TrafficMix:
     occupancy: float  # mean active-slot fraction over the window
     occupancy_bucket: float  # quantized to quarters (cache-stable cells)
     tokens: int  # tokens seen in the window
+    # tightest per-step time budget implied by pending request SLOs (None
+    # when no queued/in-flight request carries one) — joins the narrowing
+    # requirement as max_time_s
+    slo_time_per_step_s: Optional[float] = None
 
     def weight(self, kind: str) -> float:
         return dict(self.kind_weights).get(kind, 0.0)
@@ -156,6 +167,7 @@ class PlacementController:
         catalog: Optional[dict[str, ShapeSpec]] = None,
         power: TpuPowerModel = TpuPowerModel(),
         interval_waves: int = 4,
+        interval_steps: int = 32,
         min_kind_weight: float = 0.02,
         prefer: str = "energy",
         drift_threshold: float = 0.2,
@@ -188,6 +200,7 @@ class PlacementController:
         self.catalog = dict(catalog or DEFAULT_CATALOG)
         self.power = power
         self.interval_waves = interval_waves
+        self.interval_steps = interval_steps
         self.min_kind_weight = min_kind_weight
         self.prefer = prefer
         self.drift_threshold = drift_threshold
@@ -196,18 +209,32 @@ class PlacementController:
         self.history: list[PlanReport] = []
         self._last_stats = engine.stats.snapshot()
         self._waves_since = 0
+        self._steps_since = 0
         self._resweep_pending = False
 
     # -- wiring --------------------------------------------------------
     def attach(self) -> "PlacementController":
-        """Register on the engine's between-waves hook."""
+        """Register on the engine's observation hooks: ``on_wave_end``
+        (wave scheduler, ``interval_waves`` window) and ``on_step_end``
+        (slot streams have no wave boundaries — the window is
+        ``interval_steps`` engine steps). Each scheduler only fires its own
+        hook, so the windows never double-count."""
         self.engine.on_wave_end = self._on_wave_end
+        if hasattr(self.engine, "on_step_end"):
+            self.engine.on_step_end = self._on_step_end
         return self
 
     def _on_wave_end(self, engine: ServingEngine) -> None:
         self._waves_since += 1
         if self._resweep_pending or self._waves_since >= self.interval_waves:
             self._waves_since = 0
+            self._resweep_pending = False
+            self.update()
+
+    def _on_step_end(self, engine: ServingEngine) -> None:
+        self._steps_since += 1
+        if self._resweep_pending or self._steps_since >= self.interval_steps:
+            self._steps_since = 0
             self._resweep_pending = False
             self.update()
 
@@ -253,9 +280,11 @@ class PlacementController:
         weights = (("prefill", prefill / total if total else 0.0),
                    ("decode", decode / total if total else 0.0))
         occ = active / slot_steps if slot_steps else 0.0
+        slo_fn = getattr(self.engine, "slo_time_per_step_s", None)
         return TrafficMix(kind_weights=weights, occupancy=occ,
                           occupancy_bucket=occupancy_bucket(occ),
-                          tokens=total)
+                          tokens=total,
+                          slo_time_per_step_s=slo_fn() if slo_fn else None)
 
     def shape_for(self, kind: str, bucket: float) -> ShapeSpec:
         """Catalog shape scaled to the observed batch-occupancy bucket."""
@@ -290,13 +319,15 @@ class PlacementController:
         for kind in kinds:
             kind_results = [cr for cr in fleet.cells
                             if cr.spec.shape.kind == kind]
-            placement = self._narrow_kind(kind, kind_results, fleet, report)
+            placement = self._narrow_kind(kind, kind_results, fleet, report,
+                                          mix=mix)
             if placement is not None:
                 report.placements[kind] = placement
         return report
 
     def _narrow_kind(self, kind: str, kind_results, fleet: FleetResult,
-                     report: PlanReport) -> Optional[Placement]:
+                     report: PlanReport,
+                     mix: Optional[TrafficMix] = None) -> Optional[Placement]:
         """Feed the kind-level fleet frontier through the paper's staged
         destination selection; returns None to keep the current placement."""
         if not kind_results:
@@ -306,6 +337,10 @@ class PlacementController:
         kfront = fleet_frontier(cr.search.frontier for cr in kind_results)
         by_cell = frontier_by_cell(kfront)
 
+        ref = next((cr for cr in kind_results
+                    if cr.spec.mesh_shape == self.mesh_options[0]),
+                   kind_results[0])
+        ref_tokens = max(ref.spec.shape.tokens(), 1)
         req = self.requirement
         if req is None and self.require_energy_improvement:
             # default §3.3 requirement: at least as good (Watt·s) as the
@@ -315,15 +350,22 @@ class PlacementController:
             # per token than the live placement (smaller batches amortize
             # the fixed parameter traffic over fewer tokens), and adopting
             # it would make "adaptive" lose to static.
-            ref = next((cr for cr in kind_results
-                        if cr.spec.mesh_shape == self.mesh_options[0]),
-                       kind_results[0])
             cap = ref.search.baseline.energy_ws
             live = self.engine.placements.get(kind)
             if live is not None:
-                tokens = max(ref.spec.shape.tokens(), 1)
-                cap = min(cap, live.energy_per_token_ws * tokens)
+                cap = min(cap, live.energy_per_token_ws * ref_tokens)
             req = UserRequirement(max_energy_ws=cap)
+        slo = mix.slo_time_per_step_s if mix is not None else None
+        if slo is not None:
+            # multi-requirement narrowing (§3.3): the per-step time budget
+            # the pending SLOs imply joins energy. A cell measurement covers
+            # ref_tokens tokens and a serving step consumes one token per
+            # request, so the budget scales to max_time_s = slo * tokens.
+            cap_t = slo * ref_tokens
+            if req is None:
+                req = UserRequirement(max_time_s=cap_t)
+            elif req.max_time_s is None or req.max_time_s > cap_t:
+                req = replace(req, max_time_s=cap_t)
 
         def make_search(cr):
             points = by_cell.get(cr.cell, [])

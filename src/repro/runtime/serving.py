@@ -1,27 +1,46 @@
-"""Batched serving loop (wave-scheduled continuous batching).
+"""Batched serving loop — slot-stream continuous batching (default) with the
+legacy wave scheduler kept behind ``scheduler="wave"``.
 
-Requests are admitted in waves of up to B slots; each wave shares one decode
-state (single global position stream), prompts are fed token-by-token
-("prefill-as-decode" — exact for every family, incl. SSM/hybrid, since the
-decode step IS the recurrence), then tokens are decoded greedily until every
-request in the wave finishes. Finished slots idle out with masked writes; a
-new wave gets a fresh state so cache positions never alias between requests.
+**Slot streams** (``scheduler="stream"``): each of the B slots carries its own
+position stream inside one shared decode state (``models/transformer.py``
+grew per-slot positions + ``reset_decode_slots``). A slot admits the next
+queued request the step after its previous occupant finishes: the freed slot
+is masked-reset (position back to 0, recurrent state re-initialized) while
+its neighbors keep decoding, so cache positions never alias across the
+requests sharing a slot — exactness is preserved for all architecture
+families, and for any fixed request set the decoded outputs are
+token-identical to the wave scheduler's. Prompts are still fed
+token-by-token ("prefill-as-decode" — exact for every family, incl.
+SSM/hybrid, since the decode step IS the recurrence).
 
-This trades some slot utilization for exactness on all 10 architecture
-families with one code path; per-slot position streams are a serving-layer
-optimization documented as future work in DESIGN.md.
+**Waves** (``scheduler="wave"``): requests are admitted in waves of up to B
+slots sharing one fresh decode state; finished slots idle out until the
+whole wave drains. This is the pre-slot-stream design, retained so existing
+comparisons stay reproducible — the occupancy it leaves on the table on
+ragged-length traffic is exactly what ``benchmarks/serving_bench.py``'s
+ragged scenario measures.
 
-Placement integration (PR 2): the engine carries per-shape-kind
-:class:`Placement` records (chosen by ``runtime/placement.py`` from fleet
-Pareto frontiers) whose per-token energy rates accumulate into
-``EngineStats.energy_ws`` as tokens are processed — the modeled Watt·s the
-offload search is minimizing, attributed to live traffic. Reconfiguration
-happens strictly *between* waves: ``run`` fires ``on_wave_end`` after each
-wave and ``reconfigure`` refuses to swap placements while a wave is decoding
-(a wave's tokens are costed under the placement that admitted it).
+Placement integration: the engine carries per-shape-kind :class:`Placement`
+records (chosen by ``runtime/placement.py`` from fleet Pareto frontiers)
+whose per-token energy rates accumulate into ``EngineStats.energy_ws`` —
+the modeled Watt·s the offload search is minimizing, attributed to live
+traffic. Every token is costed under the **placement epoch active at its
+slot's admission**: ``reconfigure`` applies to newly admitted slots, so a
+mid-stream swap never re-prices in-flight requests (in wave mode this
+degenerates to the old "reconfigure only between waves" rule, which
+``reconfigure`` still enforces there). ``Placement.time_per_token_s``
+additionally makes admission placement-aware: each admitted request gets a
+modeled completion latency, checked against its optional ``slo_s`` and
+exported to the controller (``slo_time_per_step_s``) so latency SLOs join
+energy in the §3.3 narrowing.
+
+Hooks: ``on_step_end`` fires after every stream step (the controller's
+step-count observation window); ``on_wave_end`` fires after each wave in
+wave mode.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Mapping, Optional
 
@@ -39,25 +58,38 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    slo_s: Optional[float] = None  # completion-latency SLO (modeled)
     output: list[int] = field(default_factory=list)
     done: bool = False
     # queued -> active -> done; "rejected" (never admitted) and "truncated"
     # (admitted with a shortened prompt) are marked explicitly so callers
     # never mistake an unserved or clipped request for a clean completion.
     status: str = "queued"
+    # why the request stopped: "eos" | "max_new_tokens" | "length_cap".
+    # A length_cap finish reached neither eos nor max_new_tokens — the cache
+    # ran out; pre-PR-4 this was silently indistinguishable from a clean
+    # finish.
+    finish_reason: Optional[str] = None
     truncated_tokens: int = 0  # prompt tokens dropped by the truncate policy
+    # placement-modeled completion latency, stamped at admission from the
+    # slot's placement epoch (prefill steps + decode steps at the epoch's
+    # time_per_token_s rates)
+    modeled_latency_s: float = 0.0
 
 
 @dataclass
 class EngineStats:
     steps: int = 0
-    waves: int = 0
+    waves: int = 0  # wave scheduler only; 0 under slot streams
+    admissions: int = 0  # requests admitted into a slot
     prefill_tokens: int = 0
     decode_tokens: int = 0
     completed: int = 0
+    length_capped: int = 0  # finishes forced by the cache filling up
+    slo_at_risk: int = 0  # admissions whose modeled latency exceeds slo_s
     rejected: int = 0  # refused at submit (prompt cannot fit max_len)
     truncated: int = 0  # admitted with a clipped prompt
-    incomplete: int = 0  # wave exhausted before completion (defensive)
+    incomplete: int = 0  # step/wave budget exhausted before completion
     slot_steps: int = 0  # slots x steps: the occupancy denominator
     active_slot_steps: int = 0  # slots actually decoding a request
     energy_ws: float = 0.0  # modeled Watt·s under the applied placements
@@ -65,7 +97,7 @@ class EngineStats:
 
     @property
     def occupancy(self) -> float:
-        """Mean fraction of wave slots doing useful work."""
+        """Mean fraction of batch slots doing useful work."""
         return self.active_slot_steps / self.slot_steps if self.slot_steps \
             else 0.0
 
@@ -83,7 +115,8 @@ class Placement:
     """One applied (cell, destination, operating point) choice for a shape
     kind. ``energy_per_token_ws``/``time_per_token_s`` are the chosen
     pattern's measurement normalized by the cell's tokens-per-step, so the
-    serving loop can integrate modeled energy over live traffic."""
+    serving loop can integrate modeled energy over live traffic and model
+    per-request completion latency for SLO-aware admission."""
 
     kind: str  # "prefill" | "decode"
     cell: str  # fleet cell key the pattern was searched in
@@ -96,37 +129,45 @@ class Placement:
 
 
 class ServingEngine:
-    """Wave-batched greedy decoding over ``decode_step``.
+    """Greedy decoding over ``decode_step`` with slot-stream continuous
+    batching (``scheduler="stream"``, default) or wave batching
+    (``scheduler="wave"``).
 
     ``overflow`` is the admission policy for prompts that cannot leave room
     for a single generated token within ``max_len``:
 
     * ``"reject"``   — refuse at ``submit`` (marked ``rejected``, counted in
-      ``stats.rejected``, never queued). The pre-PR-2 behavior silently
-      burned a full wave on such a request and then returned it as done.
+      ``stats.rejected``, never queued).
     * ``"truncate"`` — keep the prompt head (reserving the token budget),
       mark the request ``truncated`` and serve it.
     """
 
     def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
-                 max_len: int = 256, overflow: str = "reject"):
+                 max_len: int = 256, overflow: str = "reject",
+                 scheduler: str = "stream"):
         if overflow not in ("reject", "truncate"):
             raise ValueError(f"unknown overflow policy {overflow!r}")
+        if scheduler not in ("stream", "wave"):
+            raise ValueError(f"unknown scheduler {scheduler!r}")
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.overflow = overflow
-        self.queue: list[Request] = []
+        self.scheduler = scheduler
+        self.queue: deque[Request] = deque()
         self.rejected: list[Request] = []
+        self.active: list[Request] = []  # currently admitted, not finished
         self.stats = EngineStats()
         self.placements: dict[str, Placement] = {}
         # Metered calibration of the energy ledger: per-kind multiplicative
         # corrections (metered / modeled Watt·s per token) applied by
         # PlacementController.note_metered when telemetry disagrees with the
-        # model. 1.0 (absent) = trust the model.
+        # model. 1.0 (absent) = trust the model. Corrections are live
+        # calibration state, so they apply across placement epochs.
         self.energy_correction: dict[str, float] = {}
         self.on_wave_end: Optional[Callable[["ServingEngine"], None]] = None
+        self.on_step_end: Optional[Callable[["ServingEngine"], None]] = None
         self._in_wave = False
         self._step = jax.jit(
             lambda params, state, tokens: T.decode_step(cfg, params, state,
@@ -156,9 +197,12 @@ class ServingEngine:
 
     # ------------------------------------------------------------------
     def reconfigure(self, placements: Mapping[str, Placement]) -> None:
-        """Swap per-kind placements — only ever between waves (§3.3's
-        reconfiguration point: an in-flight wave keeps the operating point
-        it was admitted under)."""
+        """Swap per-kind placements. Under slot streams the swap applies to
+        **newly admitted slots**: in-flight requests keep the epoch they were
+        admitted under, so calling this mid-run is safe and is exactly how
+        the step-windowed controller reconfigures. The wave scheduler keeps
+        the stricter legacy rule (never mid-wave; a wave's tokens are costed
+        under the placement that admitted it)."""
         if self._in_wave:
             raise RuntimeError("reconfigure() during a wave; use the "
                                "on_wave_end hook to apply between waves")
@@ -167,12 +211,161 @@ class ServingEngine:
         if was_configured:  # the first application is configuration, not RE-
             self.stats.reconfigurations += 1
 
-    def _token_energy(self, kind: str) -> float:
-        p = self.placements.get(kind)
+    def _token_energy(self, kind: str,
+                      placements: Optional[Mapping[str, Placement]] = None
+                      ) -> float:
+        """Watt·s for one token of ``kind`` under a placement epoch
+        (default: the engine's current placements). ``energy_correction``
+        is live telemetry calibration and always applies at current value."""
+        pl = self.placements if placements is None else placements
+        p = pl.get(kind)
         if p is None:
             return 0.0
         return p.energy_per_token_ws * self.energy_correction.get(kind, 1.0)
 
+    # -- placement-aware admission -------------------------------------
+    def modeled_latency_s(
+            self, req: Request,
+            placements: Optional[Mapping[str, Placement]] = None) -> float:
+        """Modeled completion latency of ``req`` under a placement epoch:
+        one step per prompt token at the prefill rate plus one step per
+        additional generated token at the decode rate (the step consuming
+        the last prompt token already emits the first output token)."""
+        pl = self.placements if placements is None else placements
+        pre = pl.get("prefill")
+        dec = pl.get("decode")
+        pre_t = pre.time_per_token_s if pre is not None else 0.0
+        dec_t = dec.time_per_token_s if dec is not None else 0.0
+        return (len(req.prompt) * pre_t
+                + max(req.max_new_tokens - 1, 0) * dec_t)
+
+    def _modeled_steps(self, req: Request) -> int:
+        return len(req.prompt) + max(req.max_new_tokens - 1, 0)
+
+    def slo_time_per_step_s(self) -> Optional[float]:
+        """Tightest per-step time budget implied by the SLOs of queued and
+        in-flight requests (None when none carries one). The controller
+        folds this into the ``UserRequirement`` it narrows with, making
+        latency a first-class axis next to energy."""
+        budgets = [req.slo_s / max(self._modeled_steps(req), 1)
+                   for req in list(self.queue) + self.active
+                   if req.slo_s is not None]
+        return min(budgets) if budgets else None
+
+    def _admit(self, req: Request) -> None:
+        """Common admission bookkeeping (both schedulers)."""
+        if req.status == "queued":
+            req.status = "active"
+        req.modeled_latency_s = self.modeled_latency_s(req)
+        self.stats.admissions += 1
+        if req.slo_s is not None and req.modeled_latency_s > req.slo_s:
+            self.stats.slo_at_risk += 1
+        self.active.append(req)
+
+    def _finish(self, req: Request, reason: str) -> None:
+        req.done = True
+        req.finish_reason = reason
+        if req.status != "truncated":  # keep the clip marker
+            req.status = "done"
+        self.stats.completed += 1
+        if reason == "length_cap":
+            self.stats.length_capped += 1
+        self.active.remove(req)
+
+    def _finish_reason(self, req: Request, tok: int, next_pos: int
+                       ) -> Optional[str]:
+        """eos wins over max_new_tokens wins over length_cap."""
+        if req.eos_id is not None and tok == req.eos_id:
+            return "eos"
+        if len(req.output) >= req.max_new_tokens:
+            return "max_new_tokens"
+        if next_pos + 1 >= self.max_len:  # no room for another step
+            return "length_cap"
+        return None
+
+    # ------------------------------------------------------------------
+    # Slot-stream scheduler
+    # ------------------------------------------------------------------
+    def _run_stream(self, max_steps: int) -> list[Request]:
+        state = T.init_decode_state(self.cfg, self.slots, self.max_len)
+        slot_req: list[Optional[Request]] = [None] * self.slots
+        cursors = [0] * self.slots
+        # placement epoch captured at admission: tokens of this slot are
+        # costed under these rates no matter what reconfigure does later
+        slot_epoch: list[dict[str, Placement]] = [{} for _ in range(self.slots)]
+        done: list[Request] = []
+        for _ in range(max_steps):
+            # admission: every free slot takes the next queued request — a
+            # slot freed on step t serves its new request on step t+1
+            newly = []
+            for i in range(self.slots):
+                if slot_req[i] is None and self.queue:
+                    req = self.queue.popleft()
+                    slot_req[i] = req
+                    cursors[i] = 0
+                    slot_epoch[i] = dict(self.placements)
+                    self._admit(req)
+                    newly.append(i)
+            if not any(r is not None for r in slot_req):
+                break
+            if newly:
+                mask = np.zeros((self.slots,), bool)
+                mask[newly] = True
+                state = T.reset_decode_slots(self.cfg, state,
+                                             jnp.asarray(mask))
+            tokens = np.zeros((self.slots,), np.int32)
+            for i, req in enumerate(slot_req):
+                if req is None:
+                    continue
+                c = cursors[i]
+                tokens[i] = (req.prompt[c] if c < len(req.prompt)
+                             else req.output[-1])
+            logits, state = self._step(self.params, state,
+                                       jnp.asarray(tokens))
+            self.stats.steps += 1
+            self.stats.slot_steps += self.slots
+            self.stats.active_slot_steps += sum(r is not None
+                                                for r in slot_req)
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            for i, req in enumerate(slot_req):
+                if req is None:
+                    continue
+                c = cursors[i]
+                cursors[i] += 1
+                # the step consuming a prompt token is PREFILL — including
+                # the one consuming the last prompt token (which already
+                # emits the first output token): a length-L prompt
+                # contributes exactly L prefill tokens
+                if c < len(req.prompt):
+                    self.stats.prefill_tokens += 1
+                    self.stats.energy_ws += self._token_energy(
+                        "prefill", slot_epoch[i])
+                else:
+                    self.stats.decode_tokens += 1
+                    self.stats.energy_ws += self._token_energy(
+                        "decode", slot_epoch[i])
+                if c >= len(req.prompt) - 1:  # this step emitted a token
+                    tok = int(nxt[i])
+                    req.output.append(tok)
+                    reason = self._finish_reason(req, tok, cursors[i])
+                    if reason is not None:
+                        self._finish(req, reason)
+                        done.append(req)
+                        slot_req[i] = None  # freed; refilled next step
+            if self.on_step_end is not None:
+                self.on_step_end(self)
+        # Defensive: the submit guard bounds every request to < max_len
+        # steps, so exhaustion only happens on an under-budgeted max_steps —
+        # mark survivors rather than launder them as done.
+        for i, req in enumerate(slot_req):
+            if req is not None:
+                req.status = "incomplete"
+                self.stats.incomplete += 1
+                self.active.remove(req)
+        return done
+
+    # ------------------------------------------------------------------
+    # Wave scheduler (legacy, scheduler="wave")
     # ------------------------------------------------------------------
     def _run_wave(self, wave: list[Request]) -> None:
         state = T.init_decode_state(self.cfg, self.slots, self.max_len)
@@ -180,9 +373,9 @@ class ServingEngine:
         active = [True] * len(wave)
         self.stats.waves += 1
         self._in_wave = True
+        epoch = dict(self.placements)  # the epoch that admitted this wave
         for req in wave:
-            if req.status == "queued":
-                req.status = "active"
+            self._admit(req)
         try:
             for _ in range(self.max_len):
                 if not any(active):
@@ -203,23 +396,21 @@ class ServingEngine:
                 for i, req in enumerate(wave):
                     if not active[i]:
                         continue
+                    c = cursors[i]
                     cursors[i] += 1
-                    if cursors[i] < len(req.prompt):
-                        self.stats.prefill_tokens += 1
-                        self.stats.energy_ws += self._token_energy("prefill")
-                        continue
-                    tok = int(nxt[i])
-                    req.output.append(tok)
-                    self.stats.decode_tokens += 1
-                    self.stats.energy_ws += self._token_energy("decode")
-                    if ((req.eos_id is not None and tok == req.eos_id)
-                            or len(req.output) >= req.max_new_tokens
-                            or cursors[i] + 1 >= self.max_len):
-                        req.done = True
-                        if req.status != "truncated":  # keep the clip marker
-                            req.status = "done"
-                        active[i] = False
-                        self.stats.completed += 1
+                    # prefill/decode attribution: the step consuming the
+                    # last prompt token is prefill (see _run_stream)
+                    kind = "prefill" if c < len(req.prompt) else "decode"
+                    self.stats.prefill_tokens += kind == "prefill"
+                    self.stats.decode_tokens += kind == "decode"
+                    self.stats.energy_ws += self._token_energy(kind, epoch)
+                    if c >= len(req.prompt) - 1:
+                        tok = int(nxt[i])
+                        req.output.append(tok)
+                        reason = self._finish_reason(req, tok, cursors[i])
+                        if reason is not None:
+                            self._finish(req, reason)
+                            active[i] = False
         finally:
             self._in_wave = False
         # Defensive: the submit guard makes wave exhaustion unreachable, but
@@ -228,15 +419,23 @@ class ServingEngine:
             if active[i]:
                 req.status = "incomplete"
                 self.stats.incomplete += 1
+                self.active.remove(req)
 
-    def run(self, max_waves: int = 64) -> list[Request]:
-        """Serve up to ``max_waves`` waves; returns the *finished* requests
-        only (pre-PR-2 this list could contain never-completed requests)."""
+    def run(self, max_waves: int = 64,
+            max_steps: Optional[int] = None) -> list[Request]:
+        """Serve the queue; returns the *finished* requests in completion
+        order. Under slot streams the budget is ``max_steps`` (default
+        ``max_waves * max_len``, the same work ceiling the wave scheduler
+        had); ``max_waves`` bounds the wave scheduler."""
+        if self.scheduler == "stream":
+            if max_steps is None:
+                max_steps = max_waves * self.max_len
+            return self._run_stream(max_steps)
         done: list[Request] = []
         for _ in range(max_waves):
             if not self.queue:
                 break
-            wave = [self.queue.pop(0)
+            wave = [self.queue.popleft()
                     for _ in range(min(self.slots, len(self.queue)))]
             self._run_wave(wave)
             done.extend(r for r in wave if r.done)

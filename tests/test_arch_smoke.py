@@ -43,7 +43,9 @@ def test_decode_step_smoke(arch, key):
     logits, st2 = M.decode_step(cfg, params, st, tokens)
     assert logits.shape == (2, cfg.padded_vocab())
     assert jnp.all(jnp.isfinite(logits)), arch
-    assert int(st2["pos"]) == 1
+    # per-slot position streams: one independent counter per batch row
+    assert st2["pos"].shape == (2,)
+    assert bool(jnp.all(st2["pos"] == 1))
     logits2, _ = M.decode_step(cfg, params, st2, tokens)
     assert jnp.all(jnp.isfinite(logits2)), arch
 

@@ -30,6 +30,7 @@ class FakeEngine:
         self.placements = {}
         self.energy_correction = {}
         self.on_wave_end = None
+        self.on_step_end = None
 
     def reconfigure(self, placements):
         if self.placements:  # mirrors ServingEngine: first apply isn't a RE-
@@ -167,6 +168,43 @@ def test_repeat_plan_hits_persistent_cache(tmp_path):
         == {k: (p.destination, p.clock) for k, p in r1.placements.items()}
 
 
+def test_step_window_controller_updates_on_interval_steps(tmp_path):
+    """Slot streams have no wave boundaries: the controller observes on a
+    step-count window through the engine's on_step_end hook."""
+    eng, ctrl = make_controller(tmp_path, interval_steps=4)
+    ctrl.attach()
+    assert eng.on_step_end == ctrl._on_step_end
+    _traffic(eng, prefill=2, decode=398, slot_steps=400, active=400)
+    for _ in range(3):
+        ctrl._on_step_end(eng)
+    assert not ctrl.history  # window still open
+    ctrl._on_step_end(eng)  # 4th step closes it
+    assert len(ctrl.history) == 1
+    assert eng.placements["decode"].source == "adaptive"
+
+
+def test_slo_budget_joins_narrowing_requirement(tmp_path):
+    """Multi-requirement §3.3: the tightest per-step time budget implied by
+    request SLOs joins energy in the UserRequirement used for narrowing."""
+    eng, ctrl = make_controller(tmp_path)
+    eng.slo_time_per_step_s = lambda: 1e3  # generous: never binds
+    _traffic(eng, prefill=200, decode=200, slot_steps=400, active=400)
+    report = ctrl.update()
+    assert report.mix.slo_time_per_step_s == 1e3
+    assert report.placements
+    for p in report.placements.values():
+        assert p.time_per_token_s <= 1e3
+
+    eng2, ctrl2 = make_controller(tmp_path)
+    eng2.slo_time_per_step_s = lambda: 1e-12  # impossible per-step budget
+    _traffic(eng2, prefill=200, decode=200, slot_steps=400, active=400)
+    report2 = ctrl2.update()
+    assert report2.mix.slo_time_per_step_s == 1e-12
+    # nothing satisfies time AND energy jointly -> keep the current
+    # placement rather than adopt one that blows the SLO
+    assert report2.placements == {}
+
+
 # ---------------------------------------------------------------------------
 # Metered drift hook (telemetry feedback)
 # ---------------------------------------------------------------------------
@@ -266,7 +304,7 @@ def small_model():
 
 def test_reconfigure_refused_mid_wave(small_model):
     cfg, params = small_model
-    eng = ServingEngine(cfg, params, slots=2, max_len=32)
+    eng = ServingEngine(cfg, params, slots=2, max_len=32, scheduler="wave")
     seen = {}
 
     def hook(engine):
@@ -287,7 +325,8 @@ def test_end_to_end_adaptive_serving_beats_static(small_model, tmp_path):
     cfg, params = small_model
 
     def run_engine(adaptive):
-        eng = ServingEngine(cfg, params, slots=4, max_len=48)
+        eng = ServingEngine(cfg, params, slots=4, max_len=48,
+                            scheduler="wave")
         eng.reconfigure(static_placements("llama3.2-3b", MESH0))
         ctrl = None
         if adaptive:

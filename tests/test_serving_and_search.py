@@ -29,6 +29,8 @@ def small_model():
 
 
 def test_serving_batched_requests(small_model):
+    """Default scheduler (slot streams): every slot admits the next request
+    the step after its previous one finishes; no wave barrier."""
     cfg, params = small_model
     eng = ServingEngine(cfg, params, slots=4, max_len=48)
     for i in range(6):
@@ -36,8 +38,30 @@ def test_serving_batched_requests(small_model):
     done = eng.run()
     assert len(done) == 6
     assert all(len(r.output) == 5 for r in done)
+    assert eng.stats.waves == 0  # no waves under slot streams
+    assert eng.stats.admissions == 6
+    # each request: 3 prompt-consuming steps (prefill) + 4 more generated
+    # tokens (the last prefill step already emits the first one)
+    assert eng.stats.prefill_tokens == 18
+    assert eng.stats.decode_tokens == 24
+    # 7 steps per request over 4 slots, packed back-to-back: 4 slots serve
+    # {2,2,1,1} requests -> 14 steps, not the wave scheduler's 2 x 7
+    assert eng.stats.steps == 14
+
+
+def test_serving_wave_scheduler_still_available(small_model):
+    """scheduler="wave" keeps the legacy wave-barrier behavior so existing
+    comparisons stay reproducible."""
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, slots=4, max_len=48, scheduler="wave")
+    for i in range(6):
+        eng.submit(Request(rid=i, prompt=[1 + i, 2, 3], max_new_tokens=5))
+    done = eng.run()
+    assert len(done) == 6
     assert eng.stats.waves == 2  # 6 requests over 4 slots
-    assert eng.stats.decode_tokens == 30
+    assert eng.stats.prefill_tokens == 18
+    assert eng.stats.decode_tokens == 24
+    assert eng.stats.steps == 14  # both waves run their longest request
 
 
 def test_serving_greedy_matches_manual_decode(small_model):
@@ -68,10 +92,15 @@ def test_serving_eos_stops(small_model):
     eng2 = ServingEngine(cfg, params, slots=1, max_len=64)
     eng2.submit(Request(rid=1, prompt=[3, 4], max_new_tokens=8, eos_id=first))
     done = eng2.run()
-    # eos on the very first decode token: exactly one token, marked done
+    # eos on the very first generated token: exactly one token, marked done.
+    # The step that emitted it consumed the LAST PROMPT token, so it bills
+    # as prefill — a 2-token prompt contributes 2 prefill and 0 decode
+    # tokens (the pre-PR-4 accounting billed it as decode).
     assert done[0].output == [first]
     assert done[0].done and done[0].status == "done"
-    assert eng2.stats.completed == 1 and eng2.stats.decode_tokens == 1
+    assert done[0].finish_reason == "eos"
+    assert eng2.stats.completed == 1
+    assert eng2.stats.prefill_tokens == 2 and eng2.stats.decode_tokens == 0
 
 
 def test_serving_empty_queue_is_noop(small_model):
@@ -123,9 +152,11 @@ def test_serving_truncate_policy_serves_clipped_prompt(small_model):
     done = eng.run()
     assert done == [req] and req.done and len(req.output) == 4
     assert req.status == "truncated"  # clip marker survives completion
-    # stats consistent: p-1 prefill feeds, max_new decode tokens, 1 completion
-    assert eng.stats.prefill_tokens == 11
-    assert eng.stats.decode_tokens == 4
+    assert req.finish_reason == "max_new_tokens"
+    # stats consistent: every clipped-prompt token bills as prefill; the
+    # remaining max_new-1 generation steps bill as decode
+    assert eng.stats.prefill_tokens == 12
+    assert eng.stats.decode_tokens == 3
     assert eng.stats.completed == 1 and eng.stats.incomplete == 0
 
 
