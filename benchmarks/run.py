@@ -10,6 +10,8 @@ Sections:
                     per-cell time/energy Pareto frontiers (Fig.5 generalized)
   serving_*       — static vs traffic-adaptive placement under live serving
                     traffic (Watt·s per 1k tokens; persisted-cache resweep)
+  router_*        — fleet router across mixed destinations: adaptive
+                    energy routing vs round-robin vs single engines
   power_*         — metered Watt·s through the telemetry layer (Fig.5 via
                     trace integration; model calibration vs measurements)
   roofline_*      — §Roofline summary per dry-run cell (when records exist)
@@ -18,11 +20,12 @@ Sections:
 
 ``--json-dir DIR`` writes the unified BENCH_*.json artifact
 (benchmarks/artifact.py: schema, bench, scenarios, metrics, cache) for
-every benchmark that produces one (fleet, serving, power).
+every benchmark that produces one (fleet, serving, router, power).
 ``--bench-out PATH`` writes the serving perf-trajectory artifact to an
 explicit path (CI: ``BENCH_serving.json`` at the repo root, uploaded per
 commit). ``--only a,b`` restricts the run to named sections
-(himeno, ga, fleet, serving, power, kernel, e2e, roofline).
+(himeno, ga, fleet, serving, router, power, kernel, e2e, roofline).
+See benchmarks/README.md for the flag and artifact-schema reference.
 """
 from __future__ import annotations
 
@@ -32,8 +35,8 @@ import sys
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-SECTIONS = ("himeno", "ga", "fleet", "serving", "power", "kernel", "e2e",
-            "roofline")
+SECTIONS = ("himeno", "ga", "fleet", "serving", "router", "power", "kernel",
+            "e2e", "roofline")
 
 
 def main() -> None:
@@ -77,6 +80,9 @@ def main() -> None:
     if "serving" in only:
         from benchmarks import serving_bench
         rows += serving_bench.run(json_path=args.bench_out or art("serving"))
+    if "router" in only:
+        from benchmarks import router_bench
+        rows += router_bench.run(json_path=art("router"))
     if "power" in only:
         from benchmarks import power_bench
         rows += power_bench.run(json_path=art("power"))

@@ -1,0 +1,71 @@
+"""Fleet routing example: energy-aware serving across mixed destinations.
+
+A FleetRouter pins one slot-stream engine to each destination in the
+mixed-environment catalog (compute-optimized, memory-optimized low-power,
+fast balanced — the TPU translation of the paper's GPU/FPGA/many-core-CPU
+mix), routes each request to the engine whose placement minimizes its
+marginal modeled Watt·s subject to its SLO, then runs one shared
+observe→sweep→narrow re-plan and serves a second batch on the adapted
+placements.
+
+    PYTHONPATH=src python examples/route_fleet.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+
+from repro.configs import get_config, mixed_fleet, reduced
+from repro.core.ga import GAConfig
+from repro import models as M
+from repro.runtime import FleetRouter, Request
+
+
+def requests(base):
+    out = []
+    for i in range(4):  # long prompts, short generations
+        out.append(Request(rid=base + i,
+                           prompt=[1 + (i + j) % 17 for j in range(24)],
+                           max_new_tokens=2))
+    for i in range(4, 8):  # short prompts, long generations
+        out.append(Request(rid=base + i, prompt=[1 + i % 7, 3],
+                           max_new_tokens=8))
+    # one interactive request with a tight completion SLO: routed to the
+    # fast slice even though it costs more Watt·s
+    out.append(Request(rid=base + 8, prompt=[2, 5], max_new_tokens=8,
+                       slo_s=3e-4))
+    return out
+
+
+def main():
+    cfg = reduced(get_config("llama3.2-3b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    router = FleetRouter(cfg, params, mixed_fleet(), arch="llama3.2-3b",
+                         policy="energy", slots=2, max_len=48,
+                         ga_config=GAConfig(population=10, generations=8,
+                                            seed=0))
+    for r in requests(0):
+        router.submit(r)
+    done = router.run()
+    report = router.plan()  # one shared sweep re-plans every engine
+    for r in requests(100):
+        router.submit(r)
+    done += router.run()
+
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"  rid={r.rid:>3}  -> {r.served_by:<10} "
+              f"prompt={len(r.prompt):>2} new={len(r.output)} "
+              f"slo={'-' if r.slo_s is None else r.slo_s}")
+    s = router.fleet_stats()
+    print(f"fleet: {len(done)} served, {s.total_tokens} tokens, "
+          f"{s.energy_ws:.1f} Ws "
+          f"({s.energy_ws / max(s.total_tokens, 1) * 1e3:.1f} Ws/1k), "
+          f"occupancy {s.occupancy:.2f}, slo_at_risk {s.slo_at_risk}")
+    print(f"plan: preferred={report.preferred} "
+          f"dominated={report.dominated or 'none'} "
+          f"new_measurements={report.new_measurements}")
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,13 @@ from repro.configs.base import (
     smoke_shape,
 )
 
+# Imported last: destinations pulls in repro.core.power, which initializes
+# the (already import-safe) core package — keep it below the base re-exports
+# so core modules importing repro.configs.base never see a partial package.
+from repro.configs.destinations import (
+    DESTINATIONS, DestinationSpec, mixed_fleet,
+)
+
 __all__ = [
     "ArchConfig",
     "ShapeSpec",
@@ -20,4 +27,7 @@ __all__ = [
     "reduced",
     "register",
     "smoke_shape",
+    "DESTINATIONS",
+    "DestinationSpec",
+    "mixed_fleet",
 ]

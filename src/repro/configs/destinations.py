@@ -1,0 +1,102 @@
+"""Mixed-environment offload-destination catalog (arXiv:2011.12431).
+
+The paper's follow-up evaluates automatic offloading when *several*
+destination kinds sit side by side — GPU, FPGA, many-core CPU — and each
+kernel class has a different best home. The TPU adaptation of that setting
+is a catalog of *slices that differ in silicon, not just size*: each
+:class:`DestinationSpec` pairs a mesh shape with its own
+:class:`~repro.core.power.TpuPowerModel`, so the same workload cell costs
+differently per destination and the fleet router
+(``runtime/router.py``) has a real energy tradeoff to exploit:
+
+* ``pod_v5e``    — the balanced production slice (paper-faithful default
+  coefficients). Jack of all trades, master of none.
+* ``pod2_v5e``   — the same silicon, twice the slice: strictly faster at
+  equal modeled energy, so ``pod_v5e`` is Pareto-dominated whenever both
+  are in the fleet — the router's drain/rebalance demonstration case.
+* ``mxu_dense``  — a compute-optimized part (efficient tensor cores, power-
+  hungry memory system): cheapest Watt·s/token for compute-bound *prefill*.
+* ``hbm_lp``     — a low-power memory-optimized inference part on a small
+  slice (cheap HBM, low idle floor, weak matrix units): cheapest
+  Watt·s/token for memory-bound *decode*, at higher step time.
+
+``verify_cost_s`` orders staged §3.3 verification (paper: many-core CPU
+costs almost nothing to verify, FPGA hours): small efficiency parts verify
+cheaply, big pods are the expensive targets.
+
+The catalog is deliberately small and explicit — benchmarks and tests
+reference destinations by name, and ``mixed_fleet()`` returns the standard
+heterogeneous line-up used by ``benchmarks/router_bench.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core.power import TpuPowerModel
+
+
+@dataclass(frozen=True)
+class DestinationSpec:
+    """One offload destination: a mesh *on specific silicon*.
+
+    ``name`` is the catalog label requests are reported against
+    (``Request.destination``); ``verify_cost_s`` is the stand-in staged-
+    verification cost for §3.3 cheap-to-expensive ordering."""
+
+    name: str
+    mesh: tuple[tuple[str, int], ...]  # sorted (axis, size) items
+    power: TpuPowerModel
+    verify_cost_s: float
+    description: str = ""
+
+    @property
+    def mesh_shape(self) -> dict[str, int]:
+        return dict(self.mesh)
+
+    @property
+    def chips(self) -> int:
+        n = 1
+        for _, v in self.mesh:
+            n *= v
+        return n
+
+
+def _spec(name: str, mesh_shape: dict[str, int], power: TpuPowerModel,
+          verify_cost_s: float, description: str) -> DestinationSpec:
+    return DestinationSpec(name, tuple(sorted(mesh_shape.items())), power,
+                           verify_cost_s, description)
+
+
+DESTINATIONS: dict[str, DestinationSpec] = {
+    d.name: d for d in (
+        _spec("pod_v5e", {"data": 16, "model": 16}, TpuPowerModel(),
+              verify_cost_s=256.0,
+              description="balanced 256-chip production slice"),
+        _spec("pod2_v5e", {"data": 16, "model": 16, "pod": 2},
+              TpuPowerModel(),
+              verify_cost_s=512.0,
+              description="2-pod slice: same silicon, half the step time"),
+        _spec("mxu_dense", {"data": 16, "model": 16},
+              TpuPowerModel(p_idle=20.0, p_mxu=55.0, p_hbm=19.0,
+                            p_ici=10.0),
+              verify_cost_s=384.0,
+              description="inference-tuned compute part: efficient tensor "
+                          "cores and a lean idle floor — prefill's best "
+                          "home, a close second on decode"),
+        _spec("hbm_lp", {"data": 4, "model": 16},
+              TpuPowerModel(p_idle=22.0, p_mxu=180.0, p_hbm=14.0,
+                            p_ici=8.0),
+              verify_cost_s=64.0,
+              description="low-power memory-optimized inference part on a "
+                          "small slice — decode's best home, slow prefill"),
+    )
+}
+
+
+def mixed_fleet(names: tuple[str, ...] = ("pod2_v5e", "mxu_dense", "hbm_lp")
+                ) -> list[DestinationSpec]:
+    """The standard heterogeneous line-up: one fast balanced slice, one
+    compute-optimized, one memory-optimized. ``pod_v5e`` is left out by
+    default because ``pod2_v5e`` Pareto-dominates it (include it explicitly
+    to exercise drain/rebalance)."""
+    return [DESTINATIONS[n] for n in names]

@@ -203,23 +203,35 @@ class CellSpec:
     register_backend`); None means the analytic cost model. Backend-keyed
     cells get a stable ``@backend`` cache namespace, so re-sweeping the same
     backend-backed cell hits the shared (possibly disk-persisted) cache —
-    model-, compile- and meter-backed cells coexist in one fleet."""
+    model-, compile- and meter-backed cells coexist in one fleet.
+
+    ``power`` pins the cell to a per-destination power model (a mixed
+    offloading environment runs the same workload on different silicon —
+    arXiv:2011.12431); None inherits ``search_fleet``'s fleet-wide model.
+    The analytic cache key already includes the power model, so
+    per-destination cells share nothing they shouldn't, and the cell label
+    grows a stable ``@pw:`` namespace so cells with the same mesh but
+    *different* power models never collide in per-cell result maps (two
+    destinations on identical mesh AND identical coefficients share one
+    label by design — they are the same cell)."""
 
     arch: str
     shape: ShapeSpec
     mesh: tuple[tuple[str, int], ...]  # sorted (axis, size) items
     seed: int = 0
     backend: Optional[str] = None
+    power: Optional[TpuPowerModel] = None
 
     @staticmethod
     def create(arch: str, shape: Union[str, ShapeSpec],
                mesh_shape: dict[str, int], seed: int = 0,
-               backend: Optional[str] = None) -> "CellSpec":
+               backend: Optional[str] = None,
+               power: Optional[TpuPowerModel] = None) -> "CellSpec":
         if isinstance(shape, str):
             from repro.configs import SHAPES
             shape = SHAPES[shape]
         return CellSpec(arch, shape, tuple(sorted(mesh_shape.items())), seed,
-                        backend)
+                        backend, power)
 
     @property
     def mesh_shape(self) -> dict[str, int]:
@@ -230,7 +242,11 @@ class CellSpec:
         from repro.configs import get_config
         key = lm_cell_key(get_config(self.arch), self.shape, self.mesh_shape,
                           seed=self.seed)
-        return f"{key}@{self.backend}" if self.backend else key
+        if self.backend:
+            key = f"{key}@{self.backend}"
+        if self.power is not None:
+            key = f"{key}@pw:{self.power.tag}"
+        return key
 
 
 @dataclass
@@ -295,14 +311,20 @@ def search_fleet(
     def run_cell(spec: CellSpec) -> FleetCellResult:
         t0 = time.perf_counter()
         cfg = get_config(spec.arch)
+        cell_power = spec.power if spec.power is not None else power
         measure = cell_label = None
         if spec.backend:
             from repro.core.evaluator import get_backend
             measure = get_backend(spec.backend)(cfg, spec.shape,
-                                                spec.mesh_shape, power)
+                                                spec.mesh_shape, cell_power)
             cell_label = spec.key  # stable: re-sweeps hit the shared cache
+        elif spec.power is not None:
+            # analytic cell pinned to a destination power model: the label's
+            # @pw: namespace keeps per-cell results apart; the semantic cache
+            # key already embeds the power model, so caching stays exact
+            cell_label = spec.key
         res = search_lm_cell(cfg, spec.shape, spec.mesh_shape, ga_config,
-                             measure=measure, power=power, engine=eng,
+                             measure=measure, power=cell_power, engine=eng,
                              cell=cell_label, ga_seed=spec.seed)
         req = requirement
         if req is not None and req.min_speedup is not None \

@@ -15,7 +15,7 @@ operating point.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterable, Optional, Sequence
+from typing import Callable, Iterable, Optional, Sequence
 
 from repro.core.fitness import Measurement, UserRequirement, fitness
 
@@ -94,6 +94,36 @@ def frontier_by_cell(points: Iterable[ParetoPoint]
     for p in points:
         out.setdefault(p.cell, []).append(p)
     return out
+
+
+def frontier_by_destination(
+    points: Iterable[ParetoPoint],
+    destination_of: Callable[[ParetoPoint], str],
+) -> dict[str, list[ParetoPoint]]:
+    """Group (fleet-)frontier points by offload destination, preserving
+    order. ``destination_of`` maps a point to its destination label (the
+    fleet router passes its cell→destination table; cell keys embed the mesh
+    label but a destination is more than a mesh — a mixed environment runs
+    the same mesh shape on different silicon)."""
+    out: dict[str, list[ParetoPoint]] = {}
+    for p in points:
+        out.setdefault(destination_of(p), []).append(p)
+    return out
+
+
+def dominated_destinations(
+    candidates: Sequence[str],
+    frontier_points: Iterable[ParetoPoint],
+    destination_of: Callable[[ParetoPoint], str],
+) -> list[str]:
+    """Candidate destinations contributing **no** point to the fleet
+    frontier, in candidate order: every operating point they offer is
+    dominated by some other destination's. This is the fleet router's
+    drain signal — an engine pinned to a dominated destination should stop
+    receiving traffic and its queued (not yet admitted) requests migrate
+    to engines that still earn their place on the frontier."""
+    on_frontier = {destination_of(p) for p in frontier_points}
+    return [c for c in candidates if c not in on_frontier]
 
 
 def narrow(points: Iterable[ParetoPoint], req: Optional[UserRequirement]

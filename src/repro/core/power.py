@@ -69,6 +69,15 @@ class TpuPowerModel:
     p_hbm: float = 35.0
     p_ici: float = 10.0
 
+    @property
+    def tag(self) -> str:
+        """Stable short label derived from the coefficients, used to
+        namespace fleet-cell labels when cells carry per-destination power
+        models (a mixed-environment fleet sweeps the same mesh under
+        different silicon; their results must never collide)."""
+        return (f"i{self.p_idle:g}m{self.p_mxu:g}"
+                f"h{self.p_hbm:g}c{self.p_ici:g}")
+
     def average_watts(self, t_step: float, t_compute: float, t_memory: float,
                       t_collective: float) -> float:
         """Per-chip watts given roofline component-active times."""

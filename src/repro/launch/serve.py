@@ -1,11 +1,19 @@
-"""Serving driver: batched requests through the slot-stream engine
-(``--scheduler wave`` falls back to the legacy wave scheduler).
+"""Serving driver: batched requests through the slot-stream engine — the
+**default scheduler** since PR 4 (``--scheduler wave`` selects the legacy
+wave scheduler, kept for reproducible comparisons only).
 
 ``--adaptive`` attaches the traffic-adaptive placement controller
 (runtime/placement.py): the engine starts on the static paper-faithful
 placement and re-plans from the observed traffic mix — on a step-count
 window under slot streams, between waves under the wave scheduler — through
 the disk-persisted measurement cache under ``results/``.
+
+``--fleet`` serves through the :class:`~repro.runtime.router.FleetRouter`
+instead: one engine per mixed-environment catalog destination
+(``configs/destinations.py``), requests routed by ``--policy``
+(energy | latency | round_robin), with one shared sweep re-planning every
+engine mid-run when ``--adaptive`` is also set. Every served request
+reports which engine/destination billed it.
 """
 from __future__ import annotations
 
@@ -15,14 +23,20 @@ from typing import Optional
 
 import jax
 
-from repro.configs import get_config, reduced as reduce_cfg
+from repro.configs import get_config, mixed_fleet, reduced as reduce_cfg
 from repro import models as M
 from repro.core.ga import GAConfig
-from repro.runtime import PlacementController, Request, ServingEngine, \
-    static_placements
+from repro.runtime import FleetRouter, PlacementController, Request, \
+    ServingEngine, static_placements
 from repro.runtime.placement import DEFAULT_MESH_OPTIONS
 
 DEFAULT_MESH = DEFAULT_MESH_OPTIONS[0]
+
+
+def _requests(num_requests: int, max_new_tokens: int) -> list[Request]:
+    return [Request(rid=i, prompt=[1 + i % 7, 2, 3 + i % 5],
+                    max_new_tokens=max_new_tokens)
+            for i in range(num_requests)]
 
 
 def serve(arch: str = "llama3.2-3b", *, use_reduced: bool = True,
@@ -47,9 +61,8 @@ def serve(arch: str = "llama3.2-3b", *, use_reduced: bool = True,
             ga_config=GAConfig(population=10, generations=8),
             interval_waves=interval_waves,
             interval_steps=interval_steps).attach()
-    for i in range(num_requests):
-        engine.submit(Request(rid=i, prompt=[1 + i % 7, 2, 3 + i % 5],
-                              max_new_tokens=max_new_tokens))
+    for r in _requests(num_requests, max_new_tokens):
+        engine.submit(r)
     t0 = time.time()
     done = engine.run()
     wall = time.time() - t0
@@ -73,6 +86,56 @@ def serve(arch: str = "llama3.2-3b", *, use_reduced: bool = True,
                                  for r in controller.history)
                              if controller else 0),
         "outputs": {r.rid: r.output for r in done},
+        "served_by": {r.rid: (r.served_by, r.destination) for r in done},
+    }
+
+
+def serve_fleet(arch: str = "llama3.2-3b", *, use_reduced: bool = True,
+                num_requests: int = 8, slots: int = 2,
+                max_new_tokens: int = 8, max_len: int = 64,
+                policy: str = "energy", adaptive: bool = False,
+                cache_path: Optional[str] = "results/eval_cache.jsonl",
+                scheduler: str = "stream") -> dict:
+    """Serve across the mixed-destination fleet (one engine per catalog
+    destination). With ``adaptive``, one shared sweep re-plans every engine
+    between two serving phases."""
+    cfg = get_config(arch)
+    if use_reduced:
+        cfg = reduce_cfg(cfg)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    router = FleetRouter(cfg, params, mixed_fleet(), arch=arch,
+                         policy=policy, slots=slots, max_len=max_len,
+                         scheduler=scheduler, cache_path=cache_path,
+                         ga_config=GAConfig(population=10, generations=8))
+    reqs = _requests(num_requests, max_new_tokens)
+    half = len(reqs) // 2 if adaptive else len(reqs)
+    t0 = time.time()
+    for r in reqs[:half]:
+        router.submit(r)
+    done = router.run()
+    if adaptive:
+        router.plan()
+        for r in reqs[half:]:
+            router.submit(r)
+        done += router.run()
+    wall = time.time() - t0
+    s = router.fleet_stats()
+    return {
+        "completed": len(done),
+        "rejected": s.rejected,
+        "decode_tokens": s.decode_tokens,
+        "wall_s": wall,
+        "tokens_per_s": s.decode_tokens / max(wall, 1e-9),
+        "steps": s.steps,
+        "occupancy": s.occupancy,
+        "energy_ws": s.energy_ws,
+        "ws_per_1k_tokens": s.energy_ws / max(s.total_tokens, 1) * 1e3,
+        "reconfigurations": s.reconfigurations,
+        "slo_at_risk": s.slo_at_risk,
+        "engines": {b.name: b.dest.description for b in router.bindings},
+        "new_measurements": sum(r.new_measurements for r in router.history),
+        "outputs": {r.rid: r.output for r in done},
+        "served_by": {r.rid: (r.served_by, r.destination) for r in done},
     }
 
 
@@ -85,24 +148,39 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--scheduler", default="stream",
                     choices=("stream", "wave"),
-                    help="slot-stream continuous batching (default) or the "
-                         "legacy wave scheduler")
+                    help="stream = slot-stream continuous batching (the "
+                         "default scheduler); wave = the legacy wave "
+                         "scheduler, kept for reproducible comparisons")
     ap.add_argument("--adaptive", action="store_true",
                     help="traffic-adaptive placement (observe/sweep/narrow/"
                          "reconfigure on a step-count window, or between "
                          "waves under --scheduler wave)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="serve across the mixed-destination fleet "
+                         "(FleetRouter, one engine per catalog destination)")
+    ap.add_argument("--policy", default="energy",
+                    choices=("energy", "latency", "round_robin"),
+                    help="fleet routing policy (with --fleet)")
     args = ap.parse_args()
-    out = serve(args.arch, use_reduced=not args.full,
-                num_requests=args.requests, slots=args.slots,
-                max_new_tokens=args.max_new_tokens, adaptive=args.adaptive,
-                scheduler=args.scheduler)
+    if args.fleet:
+        out = serve_fleet(args.arch, use_reduced=not args.full,
+                          num_requests=args.requests, slots=args.slots,
+                          max_new_tokens=args.max_new_tokens,
+                          policy=args.policy, adaptive=args.adaptive,
+                          scheduler=args.scheduler)
+    else:
+        out = serve(args.arch, use_reduced=not args.full,
+                    num_requests=args.requests, slots=args.slots,
+                    max_new_tokens=args.max_new_tokens,
+                    adaptive=args.adaptive, scheduler=args.scheduler)
     print(f"served {out['completed']} requests, {out['decode_tokens']} tokens "
           f"in {out['wall_s']:.2f}s ({out['tokens_per_s']:.1f} tok/s, "
           f"{out['steps']} steps, occupancy {out['occupancy']:.2f})")
     print(f"modeled energy: {out['energy_ws']:.0f} Ws "
           f"({out['ws_per_1k_tokens']:.0f} Ws/1k tokens), "
-          f"{out['reconfigurations']} reconfigurations, "
-          f"placements={out['placements']}")
+          f"{out['reconfigurations']} reconfigurations")
+    for rid, (engine, destination) in sorted(out["served_by"].items()):
+        print(f"  rid={rid} engine={engine} destination={destination}")
 
 
 if __name__ == "__main__":

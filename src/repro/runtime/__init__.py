@@ -7,9 +7,13 @@ from repro.runtime.serving import (
 from repro.runtime.placement import (
     PlacementController, PlanReport, TrafficMix, static_placements,
 )
+from repro.runtime.router import (
+    EngineBinding, FleetRouter, RouterPlanReport,
+)
 
 __all__ = [
     "ElasticOrchestrator", "HeartbeatMonitor", "StragglerDetector",
     "EngineStats", "Placement", "Request", "ServingEngine",
     "PlacementController", "PlanReport", "TrafficMix", "static_placements",
+    "EngineBinding", "FleetRouter", "RouterPlanReport",
 ]

@@ -39,7 +39,9 @@ than to a hand-chosen offline cell. The controller closes that loop:
 
 ``benchmarks/serving_bench.py`` drives this loop under prefill-heavy,
 decode-heavy and mixed-burst traffic and reports Watt·s per 1k tokens
-against a static placement.
+against a static placement. ``runtime/router.py`` runs the same loop once
+for a whole fleet of engines on mixed destinations; ``docs/ARCHITECTURE.md``
+diagrams the full search/serving/telemetry/router data flow.
 """
 from __future__ import annotations
 
@@ -103,6 +105,55 @@ def occupancy_bucket(occupancy: float) -> float:
     return min(1.0, math.ceil(occupancy * 4) / 4)
 
 
+def scale_shape(base: ShapeSpec, bucket: float) -> ShapeSpec:
+    """Catalog shape scaled to an observed batch-occupancy bucket (shared by
+    the per-engine controller and the fleet router, so both map the same
+    traffic onto the same cache-stable cells)."""
+    gb = max(1, int(round(base.global_batch * bucket)))
+    if gb == base.global_batch:
+        return base
+    return replace(base, name=f"{base.name}@occ{int(bucket * 100)}",
+                   global_batch=gb)
+
+
+def narrowing_requirement(
+    *,
+    base: Optional[UserRequirement],
+    require_energy_improvement: bool,
+    baseline_energy_ws: float,
+    live: Optional[Placement],
+    ref_tokens: int,
+    slo_time_per_step_s: Optional[float],
+) -> Optional[UserRequirement]:
+    """The §3.3 narrowing requirement shared by the per-engine controller
+    and the fleet router.
+
+    With no explicit ``base`` requirement and ``require_energy_improvement``
+    set, narrow to placements at least as good (Watt·s) as the cell's
+    paper-faithful ``baseline_energy_ws`` AND no worse per token than the
+    ``live`` placement currently applied — an occupancy-scaled cell's own
+    baseline can be less efficient per token than the live placement
+    (smaller batches amortize the fixed parameter traffic over fewer
+    tokens), and adopting it would make "adaptive" lose to static. A
+    pending-SLO per-step time budget joins as ``max_time_s`` (a cell
+    measurement covers ``ref_tokens`` tokens and a serving step consumes
+    one token per request, so the budget scales by ``ref_tokens``) — the
+    multi-requirement case: time SLO and energy jointly."""
+    req = base
+    if req is None and require_energy_improvement:
+        cap = baseline_energy_ws
+        if live is not None:
+            cap = min(cap, live.energy_per_token_ws * ref_tokens)
+        req = UserRequirement(max_energy_ws=cap)
+    if slo_time_per_step_s is not None:
+        cap_t = slo_time_per_step_s * ref_tokens
+        if req is None:
+            req = UserRequirement(max_time_s=cap_t)
+        elif req.max_time_s is None or req.max_time_s > cap_t:
+            req = replace(req, max_time_s=cap_t)
+    return req
+
+
 @dataclass
 class PlanReport:
     """Introspection record of one observe→sweep→narrow→reconfigure pass."""
@@ -127,9 +178,13 @@ def static_placements(
     *,
     catalog: Optional[dict[str, ShapeSpec]] = None,
     power: TpuPowerModel = TpuPowerModel(),
+    destination: Optional[str] = None,
 ) -> dict[str, Placement]:
     """Paper-faithful default placement (``Decisions()`` at nominal clock on
-    one fixed mesh) — the static baseline the adaptive loop competes with."""
+    one fixed mesh) — the static baseline the adaptive loop competes with.
+    ``destination`` overrides the reported label (the fleet router labels
+    placements with catalog destination names, not raw mesh labels);
+    ``power`` prices the cell on that destination's silicon."""
     cfg = get_config(arch)
     out: dict[str, Placement] = {}
     for kind, shape in (catalog or DEFAULT_CATALOG).items():
@@ -137,7 +192,8 @@ def static_placements(
         tokens = max(shape.tokens(), 1)
         out[kind] = Placement(
             kind=kind, cell=lm_cell_key(cfg, shape, mesh_shape),
-            destination=mesh_label(mesh_shape), decisions=Decisions(),
+            destination=destination or mesh_label(mesh_shape),
+            decisions=Decisions(),
             clock=1.0, energy_per_token_ws=m.energy_ws / tokens,
             time_per_token_s=m.time_s / tokens, source="static")
     return out
@@ -288,12 +344,7 @@ class PlacementController:
 
     def shape_for(self, kind: str, bucket: float) -> ShapeSpec:
         """Catalog shape scaled to the observed batch-occupancy bucket."""
-        base = self.catalog[kind]
-        gb = max(1, int(round(base.global_batch * bucket)))
-        if gb == base.global_batch:
-            return base
-        return replace(base, name=f"{base.name}@occ{int(bucket * 100)}",
-                       global_batch=gb)
+        return scale_shape(self.catalog[kind], bucket)
 
     # -- sweep + narrow ------------------------------------------------
     def plan(self, mix: TrafficMix) -> PlanReport:
@@ -341,31 +392,18 @@ class PlacementController:
                     if cr.spec.mesh_shape == self.mesh_options[0]),
                    kind_results[0])
         ref_tokens = max(ref.spec.shape.tokens(), 1)
-        req = self.requirement
-        if req is None and self.require_energy_improvement:
-            # default §3.3 requirement: at least as good (Watt·s) as the
-            # default destination's paper-faithful baseline for this cell,
-            # AND no worse per token than the placement currently applied —
-            # an occupancy-scaled cell's own baseline can be less efficient
-            # per token than the live placement (smaller batches amortize
-            # the fixed parameter traffic over fewer tokens), and adopting
-            # it would make "adaptive" lose to static.
-            cap = ref.search.baseline.energy_ws
-            live = self.engine.placements.get(kind)
-            if live is not None:
-                cap = min(cap, live.energy_per_token_ws * ref_tokens)
-            req = UserRequirement(max_energy_ws=cap)
-        slo = mix.slo_time_per_step_s if mix is not None else None
-        if slo is not None:
-            # multi-requirement narrowing (§3.3): the per-step time budget
-            # the pending SLOs imply joins energy. A cell measurement covers
-            # ref_tokens tokens and a serving step consumes one token per
-            # request, so the budget scales to max_time_s = slo * tokens.
-            cap_t = slo * ref_tokens
-            if req is None:
-                req = UserRequirement(max_time_s=cap_t)
-            elif req.max_time_s is None or req.max_time_s > cap_t:
-                req = replace(req, max_time_s=cap_t)
+        # default §3.3 requirement: at least as good (Watt·s) as the default
+        # destination's paper-faithful baseline for this cell AND no worse
+        # per token than the live placement, with any pending-SLO time
+        # budget joining as max_time_s (see narrowing_requirement)
+        req = narrowing_requirement(
+            base=self.requirement,
+            require_energy_improvement=self.require_energy_improvement,
+            baseline_energy_ws=ref.search.baseline.energy_ws,
+            live=self.engine.placements.get(kind),
+            ref_tokens=ref_tokens,
+            slo_time_per_step_s=(mix.slo_time_per_step_s
+                                 if mix is not None else None))
 
         def make_search(cr):
             points = by_cell.get(cr.cell, [])

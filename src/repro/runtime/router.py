@@ -1,0 +1,465 @@
+"""Fleet router: energy-aware serving across mixed offload destinations.
+
+The PR 2–4 control loop (observe → sweep → narrow → reconfigure) adapts one
+:class:`~repro.runtime.serving.ServingEngine`. The paper's end goal is a
+*mixed offloading destination environment* (arXiv:2011.12431: GPU + FPGA +
+many-core CPU side by side, with arXiv:2110.11520 measuring the Watt·s
+consequences): many engines, each pinned to a different destination, with
+live traffic routed to whichever destination serves each request cheapest.
+:class:`FleetRouter` is that layer:
+
+* **admission routing** — every submitted :class:`Request` is admitted to
+  the engine whose current :class:`Placement` minimizes the request's
+  *marginal modeled Watt·s* (prompt tokens at the engine's prefill rate +
+  generated tokens at its decode rate), subject to the request's ``slo_s``
+  (engines whose modeled queue wait + completion latency blow the SLO drop
+  out of the candidate set). The policy is pluggable: ``"energy"`` (the
+  paper's objective), ``"latency"`` (fastest modeled completion), and
+  ``"round_robin"`` (the homogeneous-fleet baseline the benchmarks compare
+  against).
+* **fleet ledger** — per-engine :class:`EngineStats` aggregate by plain
+  field-wise summation into one fleet-wide ledger (Watt·s, occupancy,
+  SLO-at-risk): the fleet ledger *is* the sum of the engine ledgers, and
+  tests pin that invariant.
+* **one shared sweep** — :meth:`plan` observes the *union* traffic mix
+  across engines and runs a single ``search_fleet`` sweep over
+  (kind × occupancy-bucket) cells × every fleet destination through the
+  shared (disk-persisted) :class:`~repro.core.evaluator.EvalEngine` cache,
+  then narrows **per engine** on that engine's own destination cells — so
+  N engines re-plan on one sweep's measurements and a repeat re-plan
+  performs zero new measurements. Destinations differ in *silicon*, not
+  just mesh size (:mod:`repro.configs.destinations` pairs each mesh with
+  its own power model), so the narrowing has real energy spreads to work
+  with.
+* **drain/rebalance** — a destination whose swept operating points are
+  dominated on every kind's fleet frontier has no reason to receive
+  traffic;
+  :meth:`rebalance` migrates its *queued (never admitted)* requests to
+  surviving engines through the normal routing policy. Admitted requests
+  are never moved, so no token is ever billed twice.
+
+Engines run their real decode loops independently; :meth:`run` drives them
+sequentially, which keeps fleet outputs token-identical to running each
+engine alone on its assigned requests (the ledger integrates *modeled*
+time/energy, so serving order does not change any reported number).
+
+See ``docs/ARCHITECTURE.md`` for where the router sits in the
+search/serving/telemetry data flow.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+from repro.configs import ShapeSpec
+from repro.configs.destinations import DestinationSpec
+from repro.core.cache_store import PersistentEvalCache
+from repro.core.device_select import Destination, SelectionReport, \
+    select_destination
+from repro.core.evaluator import EvalEngine, VectorizedExecutor
+from repro.core.fitness import Measurement, UserRequirement
+from repro.core.ga import GAConfig
+from repro.core.offload_search import CellSpec, FleetResult, search_fleet
+from repro.core.pareto import ParetoPoint, fleet_frontier, \
+    select_operating_point
+from repro.runtime.placement import DEFAULT_CATALOG, TrafficMix, \
+    narrowing_requirement, occupancy_bucket, scale_shape, static_placements
+from repro.runtime.serving import EngineStats, Placement, Request, \
+    ServingEngine
+
+POLICIES = ("energy", "latency", "round_robin")
+
+_INFEASIBLE = Measurement(time_s=0.0, energy_ws=0.0, feasible=False)
+
+
+@dataclass
+class EngineBinding:
+    """One fleet member: a serving engine pinned to a catalog destination."""
+
+    name: str
+    dest: DestinationSpec
+    engine: ServingEngine
+    order: int  # catalog position: the deterministic tie-break
+
+
+@dataclass
+class RouterPlanReport:
+    """Introspection record of one shared observe→sweep→narrow pass."""
+
+    mix: TrafficMix
+    fleet: Optional[FleetResult]
+    # engine name -> kind -> adopted placement (only engines that changed)
+    placements: dict[str, dict[str, Placement]] = field(default_factory=dict)
+    # kind -> staged §3.3 preferred destination over the whole fleet
+    preferred: dict[str, str] = field(default_factory=dict)
+    selections: dict[str, SelectionReport] = field(default_factory=dict)
+    # destinations dominated on EVERY swept kind's fleet frontier
+    dominated: list[str] = field(default_factory=list)
+    new_measurements: int = 0
+
+
+class FleetRouter:
+    """Owns N serving engines on mixed destinations and routes live traffic.
+
+    All engines share one model (``cfg``/``params`` — what actually decodes
+    locally) and one ``slots``/``max_len`` geometry; they differ in the
+    *destination* their placements are priced on. ``destinations`` may
+    repeat a spec (a homogeneous scale-out fleet): engines are then named
+    ``"<dest>:<i>"`` while the shared sweep still plans the destination
+    once.
+    """
+
+    def __init__(
+        self,
+        cfg,
+        params,
+        destinations: Sequence[DestinationSpec],
+        *,
+        arch: str,
+        policy: str = "energy",
+        slots: int = 4,
+        max_len: int = 64,
+        scheduler: str = "stream",
+        overflow: str = "reject",
+        cache_path: Optional[str] = "results/eval_cache.jsonl",
+        cache_compact: bool = True,
+        eval_engine: Optional[EvalEngine] = None,
+        ga_config: Optional[GAConfig] = None,
+        requirement: Optional[UserRequirement] = None,
+        require_energy_improvement: bool = True,
+        catalog: Optional[dict[str, ShapeSpec]] = None,
+        min_kind_weight: float = 0.02,
+        prefer: str = "energy",
+    ) -> None:
+        if not destinations:
+            raise ValueError("need at least one destination")
+        if policy not in POLICIES:
+            raise ValueError(f"unknown routing policy {policy!r}; "
+                             f"one of {POLICIES}")
+        self.arch = arch
+        self.policy = policy
+        self.catalog = dict(catalog or DEFAULT_CATALOG)
+        self.requirement = requirement
+        self.require_energy_improvement = require_energy_improvement
+        self.min_kind_weight = min_kind_weight
+        self.prefer = prefer
+        self.ga_config = ga_config or GAConfig(population=10, generations=8)
+        if eval_engine is None:
+            if cache_path:
+                eval_engine = EvalEngine(
+                    executor=VectorizedExecutor(),
+                    cache=PersistentEvalCache(cache_path,
+                                              compact=cache_compact))
+            else:
+                eval_engine = EvalEngine(executor=VectorizedExecutor())
+        self.eval_engine = eval_engine
+
+        counts: dict[str, int] = {}
+        for d in destinations:
+            counts[d.name] = counts.get(d.name, 0) + 1
+        seen: dict[str, int] = {}
+        self._bindings: list[EngineBinding] = []
+        for i, d in enumerate(destinations):
+            if counts[d.name] > 1:
+                name = f"{d.name}:{seen.get(d.name, 0)}"
+                seen[d.name] = seen.get(d.name, 0) + 1
+            else:
+                name = d.name
+            engine = ServingEngine(cfg, params, slots=slots, max_len=max_len,
+                                   overflow=overflow, scheduler=scheduler,
+                                   name=name)
+            engine.reconfigure(static_placements(
+                arch, d.mesh_shape, catalog=self.catalog, power=d.power,
+                destination=d.name))
+            self._bindings.append(EngineBinding(name, d, engine, i))
+        # unique destinations in first-appearance order: what one shared
+        # sweep plans over (a homogeneous fleet plans its destination once)
+        self.destinations: list[DestinationSpec] = []
+        for d in destinations:
+            if all(x.name != d.name for x in self.destinations):
+                self.destinations.append(d)
+
+        self.assignments: dict[int, str] = {}  # rid -> engine name
+        self.rejected: list[Request] = []
+        self.history: list[RouterPlanReport] = []
+        self._rr = 0
+        self._last: dict[str, EngineStats] = {
+            b.name: b.engine.stats.snapshot() for b in self._bindings}
+
+    # -- fleet surface -------------------------------------------------
+    @property
+    def bindings(self) -> list[EngineBinding]:
+        return list(self._bindings)
+
+    @property
+    def engines(self) -> dict[str, ServingEngine]:
+        return {b.name: b.engine for b in self._bindings}
+
+    def fleet_stats(self) -> EngineStats:
+        """The fleet-wide ledger: the field-wise sum of every engine's
+        :class:`EngineStats` (derived metrics like ``occupancy`` then come
+        out traffic-weighted for free)."""
+        total = EngineStats()
+        for b in self._bindings:
+            for f in EngineStats.__dataclass_fields__:
+                setattr(total, f, getattr(total, f)
+                        + getattr(b.engine.stats, f))
+        return total
+
+    def per_engine_stats(self) -> dict[str, EngineStats]:
+        return {b.name: b.engine.stats.snapshot() for b in self._bindings}
+
+    # -- routing -------------------------------------------------------
+    def marginal_energy_ws(self, engine: ServingEngine, req: Request
+                           ) -> float:
+        """Modeled Watt·s this request would add to ``engine``'s ledger
+        under its current placements: prompt tokens at the prefill rate plus
+        generated tokens at the decode rate (the step consuming the last
+        prompt token bills as prefill and already emits the first output
+        token, hence ``max_new_tokens - 1`` decode tokens)."""
+        return (len(req.prompt) * engine.token_energy_ws("prefill")
+                + max(req.max_new_tokens - 1, 0)
+                * engine.token_energy_ws("decode"))
+
+    def eta_s(self, binding: EngineBinding, req: Request) -> float:
+        """Modeled completion latency on this engine: queued backlog spread
+        over its slots, plus the request's own placement-modeled latency."""
+        eng = binding.engine
+        wait = sum(eng.modeled_latency_s(q) for q in eng.queue) \
+            / max(eng.slots, 1)
+        return wait + eng.modeled_latency_s(req)
+
+    def _route(self, req: Request, pool: Sequence[EngineBinding]
+               ) -> EngineBinding:
+        if self.policy == "round_robin":
+            b = pool[self._rr % len(pool)]
+            self._rr += 1
+            return b
+        if req.slo_s is not None:
+            feasible = [b for b in pool if self.eta_s(b, req) <= req.slo_s]
+            if feasible:
+                pool = feasible
+            else:
+                # no engine can hold the SLO: least-late wins (the request
+                # is then counted slo_at_risk at admission)
+                return min(pool, key=lambda b: (self.eta_s(b, req), b.order))
+        if self.policy == "latency":
+            return min(pool, key=lambda b: (self.eta_s(b, req), b.order))
+        return min(pool, key=lambda b: (self.marginal_energy_ws(b.engine, req),
+                                        self.eta_s(b, req), b.order))
+
+    def route(self, req: Request) -> str:
+        """The engine the current policy would admit ``req`` to (pure: no
+        state changes except the round-robin cursor on actual submit)."""
+        if self.policy == "round_robin":
+            return self._bindings[self._rr % len(self._bindings)].name
+        return self._route(req, self._bindings).name
+
+    def submit(self, req: Request) -> bool:
+        """Route and submit; False when the chosen engine rejects (empty
+        prompt, or the overflow policy refusing an oversized one)."""
+        binding = self._route(req, self._bindings)
+        ok = binding.engine.submit(req)
+        if ok:
+            self.assignments[req.rid] = binding.name
+        else:
+            self.rejected.append(req)
+        return ok
+
+    def run(self, max_waves: int = 64,
+            max_steps: Optional[int] = None) -> list[Request]:
+        """Drain every engine's queue; returns finished requests (engine
+        order, completion order within an engine). Engines decode
+        independently, so outputs are token-identical to running each engine
+        alone on its assigned requests, and the modeled ledger is
+        independent of serving order."""
+        done: list[Request] = []
+        for b in self._bindings:
+            done.extend(b.engine.run(max_waves=max_waves,
+                                     max_steps=max_steps))
+        return done
+
+    # -- observe (union traffic mix) -----------------------------------
+    def observe(self) -> TrafficMix:
+        """Union traffic mix across all engines since the last observation
+        (consumes the window, like the per-engine controller's)."""
+        prefill = decode = slot_steps = active = 0
+        for b in self._bindings:
+            cur, last = b.engine.stats, self._last[b.name]
+            prefill += cur.prefill_tokens - last.prefill_tokens
+            decode += cur.decode_tokens - last.decode_tokens
+            slot_steps += cur.slot_steps - last.slot_steps
+            active += cur.active_slot_steps - last.active_slot_steps
+            self._last[b.name] = cur.snapshot()
+        total = prefill + decode
+        weights = (("prefill", prefill / total if total else 0.0),
+                   ("decode", decode / total if total else 0.0))
+        occ = active / slot_steps if slot_steps else 0.0
+        budgets = [s for s in (b.engine.slo_time_per_step_s()
+                               for b in self._bindings) if s is not None]
+        return TrafficMix(kind_weights=weights, occupancy=occ,
+                          occupancy_bucket=occupancy_bucket(occ),
+                          tokens=total,
+                          slo_time_per_step_s=min(budgets) if budgets
+                          else None)
+
+    # -- one shared sweep, narrowed per engine -------------------------
+    def plan(self) -> RouterPlanReport:
+        """One shared observe → sweep → narrow → reconfigure pass for the
+        whole fleet: a single ``search_fleet`` call over the union mix's
+        cells on every destination, then per-engine narrowing on that
+        engine's own destination cells. Re-planning the same traffic
+        through the persisted cache performs zero new measurements."""
+        mix = self.observe()
+        report = RouterPlanReport(mix=mix, fleet=None)
+        kinds = [k for k in self.catalog
+                 if mix.weight(k) > self.min_kind_weight]
+        if not kinds:
+            self.history.append(report)
+            return report
+
+        cells: dict[tuple[str, str], CellSpec] = {}
+        for kind in kinds:
+            shape = scale_shape(self.catalog[kind], mix.occupancy_bucket)
+            for d in self.destinations:
+                cells[(kind, d.name)] = CellSpec.create(
+                    self.arch, shape, d.mesh_shape, power=d.power)
+        fleet = search_fleet(list(cells.values()), ga_config=self.ga_config,
+                             engine=self.eval_engine, cell_workers=1)
+        report.fleet = fleet
+        report.new_measurements = fleet.evaluations
+        by_cell = fleet.by_cell()
+
+        # fleet-frontier dominance + staged preferred destination, per kind
+        # (cross-kind dominance is meaningless: prefill and decode steps
+        # live on different time/energy scales, so a destination is drained
+        # only when EVERY kind's frontier rejects it). Membership is tested
+        # by each destination's OWN cell key: two destinations on identical
+        # silicon share a cell label by design and must share frontier fate
+        # — attributing the shared cell to just one of them would falsely
+        # drain the other.
+        dominated = {d.name for d in self.destinations}
+        for kind in kinds:
+            kind_results = [by_cell[cells[(kind, d.name)].key]
+                            for d in self.destinations]
+            kfront = fleet_frontier(cr.search.frontier
+                                    for cr in kind_results)
+            kfront_cells = {p.cell for p in kfront}
+            dominated &= {d.name for d in self.destinations
+                          if cells[(kind, d.name)].key not in kfront_cells}
+            dest_points = {d.name: [p for p in kfront
+                                    if p.cell == cells[(kind, d.name)].key]
+                           for d in self.destinations}
+            self._stage_preferred(kind, dest_points, mix, report)
+        if len(dominated) < len(self.destinations):
+            report.dominated = [d.name for d in self.destinations
+                                if d.name in dominated]
+
+        for b in self._bindings:
+            adopted: dict[str, Placement] = {}
+            for kind in kinds:
+                cr = by_cell[cells[(kind, b.dest.name)].key]
+                tokens = max(cr.spec.shape.tokens(), 1)
+                req = narrowing_requirement(
+                    base=self.requirement,
+                    require_energy_improvement=self.require_energy_improvement,
+                    baseline_energy_ws=cr.search.baseline.energy_ws,
+                    live=b.engine.placements.get(kind),
+                    ref_tokens=tokens,
+                    slo_time_per_step_s=mix.slo_time_per_step_s)
+                pt = select_operating_point(cr.search.frontier, req,
+                                            prefer=self.prefer)
+                if pt is None:
+                    continue  # keep the engine's current placement
+                dec = fleet.decisions_for(pt)
+                adopted[kind] = Placement(
+                    kind=kind, cell=pt.cell, destination=b.dest.name,
+                    decisions=dec, clock=dec.clock,
+                    energy_per_token_ws=pt.energy_ws / tokens,
+                    time_per_token_s=pt.time_s / tokens, source="adaptive")
+            if adopted:
+                b.engine.reconfigure({**b.engine.placements, **adopted})
+                report.placements[b.name] = adopted
+        self.history.append(report)
+        return report
+
+    def _stage_preferred(self, kind: str,
+                         dest_points: dict[str, list[ParetoPoint]],
+                         mix: TrafficMix, report: RouterPlanReport) -> None:
+        """Staged §3.3 selection of the fleet-preferred destination for one
+        kind: candidates verify cheap-to-expensive (``verify_cost_s`` from
+        the catalog) over the already-swept frontier points; a destination
+        whose whole frontier is dominated never charges its verify cost."""
+        req = narrowing_requirement(
+            base=self.requirement, require_energy_improvement=False,
+            baseline_energy_ws=0.0, live=None, ref_tokens=max(
+                scale_shape(self.catalog[kind],
+                            mix.occupancy_bucket).tokens(), 1),
+            slo_time_per_step_s=mix.slo_time_per_step_s)
+
+        def make_search(points):
+            def _search():
+                pt = select_operating_point(points, req, prefer=self.prefer)
+                if pt is None:
+                    return None, _INFEASIBLE
+                return pt, pt.measurement
+            return _search
+
+        candidates = [
+            Destination(name=d.name, verify_cost_s=d.verify_cost_s,
+                        search=make_search(dest_points[d.name]))
+            for d in self.destinations if dest_points.get(d.name)
+        ]
+        if not candidates:
+            return
+        selection = select_destination(candidates, requirement=req)
+        report.selections[kind] = selection
+        if selection.chosen is not None:
+            report.preferred[kind] = selection.chosen
+
+    # -- drain / rebalance ---------------------------------------------
+    def drain(self, name: str,
+              survivors: Optional[Sequence[EngineBinding]] = None) -> int:
+        """Migrate every *queued* (never admitted) request off engine
+        ``name``, re-routing each through the policy over ``survivors``
+        (default: every other engine). Admitted requests stay — their
+        tokens are already billed to their admission epoch, and moving them
+        would bill twice."""
+        source = next(b for b in self._bindings if b.name == name)
+        pool = list(survivors if survivors is not None
+                    else (b for b in self._bindings if b.name != name))
+        if not pool:
+            return 0
+        moved = 0
+        while source.engine.queue:
+            req = source.engine.queue.popleft()
+            target = self._route(req, pool)
+            # direct queue hand-off: the request was vetted at its original
+            # submit and the fleet shares one max_len, so re-vetting (and
+            # re-counting truncation) would distort the fleet ledger
+            target.engine.queue.append(req)
+            self.assignments[req.rid] = target.name
+            moved += 1
+        return moved
+
+    def rebalance(self, dominated: Optional[Sequence[str]] = None
+                  ) -> dict[str, int]:
+        """Drain queued requests off engines whose destination is dominated
+        on the fleet frontier (default: the last plan's verdict). Returns
+        {engine name: requests moved}."""
+        if dominated is None:
+            dominated = self.history[-1].dominated if self.history else []
+        dominated = set(dominated)
+        if not dominated:
+            return {}
+        survivors = [b for b in self._bindings
+                     if b.dest.name not in dominated]
+        if not survivors:
+            return {}  # refusing to drain the whole fleet
+        moved: dict[str, int] = {}
+        for b in self._bindings:
+            if b.dest.name in dominated:
+                n = self.drain(b.name, survivors)
+                if n:
+                    moved[b.name] = n
+        return moved

@@ -37,6 +37,9 @@ energy in the §3.3 narrowing.
 Hooks: ``on_step_end`` fires after every stream step (the controller's
 step-count observation window); ``on_wave_end`` fires after each wave in
 wave mode.
+
+See ``docs/ARCHITECTURE.md`` for how the engine, the placement controller,
+the telemetry loop and the fleet router fit together.
 """
 from __future__ import annotations
 
@@ -75,6 +78,12 @@ class Request:
     # slot's placement epoch (prefill steps + decode steps at the epoch's
     # time_per_token_s rates)
     modeled_latency_s: float = 0.0
+    # serving attribution, stamped at admission: which engine took the
+    # request and which offload destination its placement epoch billed it
+    # to — the fleet router's per-request routing record, and what the
+    # serve CLI reports per request
+    served_by: Optional[str] = None
+    destination: Optional[str] = None
 
 
 @dataclass
@@ -144,13 +153,14 @@ class ServingEngine:
 
     def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
                  max_len: int = 256, overflow: str = "reject",
-                 scheduler: str = "stream"):
+                 scheduler: str = "stream", name: str = "engine"):
         if overflow not in ("reject", "truncate"):
             raise ValueError(f"unknown overflow policy {overflow!r}")
         if scheduler not in ("stream", "wave"):
             raise ValueError(f"unknown scheduler {scheduler!r}")
         self.cfg = cfg
         self.params = params
+        self.name = name  # serving-attribution label (fleet router names us)
         self.slots = slots
         self.max_len = max_len
         self.overflow = overflow
@@ -223,6 +233,12 @@ class ServingEngine:
             return 0.0
         return p.energy_per_token_ws * self.energy_correction.get(kind, 1.0)
 
+    def token_energy_ws(self, kind: str) -> float:
+        """Current modeled Watt·s for one token of ``kind`` (telemetry
+        correction applied) — the marginal rate the fleet router compares
+        across engines when routing a request by energy."""
+        return self._token_energy(kind)
+
     # -- placement-aware admission -------------------------------------
     def modeled_latency_s(
             self, req: Request,
@@ -257,6 +273,9 @@ class ServingEngine:
         if req.status == "queued":
             req.status = "active"
         req.modeled_latency_s = self.modeled_latency_s(req)
+        req.served_by = self.name
+        billed = self.placements.get("decode") or self.placements.get("prefill")
+        req.destination = billed.destination if billed else None
         self.stats.admissions += 1
         if req.slo_s is not None and req.modeled_latency_s > req.slo_s:
             self.stats.slo_at_risk += 1

@@ -1,0 +1,35 @@
+"""Front-door docs stay honest in tier-1, not just in the CI docs job:
+every intra-repo link in README.md / docs/ / benchmarks/README.md resolves,
+and the README quickstart snippet parses as Python and drives the documented
+API (the CI docs job additionally executes it end-to-end).
+"""
+import ast
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+from check_docs import broken_links, doc_files, quickstart_snippet  # noqa: E402
+
+
+def test_front_door_docs_exist():
+    names = {p.relative_to(ROOT).as_posix() for p in doc_files(ROOT)}
+    assert "README.md" in names
+    assert "docs/ARCHITECTURE.md" in names
+    assert "benchmarks/README.md" in names
+
+
+def test_no_broken_intra_repo_links():
+    assert broken_links(ROOT) == []
+
+
+def test_readme_quickstart_parses_and_uses_documented_api():
+    snippet = quickstart_snippet(ROOT)
+    tree = ast.parse(snippet)  # malformed quickstart fails here
+    assert len(snippet.strip().splitlines()) <= 14  # stays a *quick*start
+    names = {n.id for n in ast.walk(tree) if isinstance(n, ast.Name)}
+    assert "search_himeno" in names  # the paper's GA entry point
+    # the imports the snippet promises actually resolve
+    from repro.core import GAConfig, search_himeno  # noqa: F401
+    from repro.core.verifier import HimenoCalibratedBackend  # noqa: F401

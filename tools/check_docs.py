@@ -1,0 +1,101 @@
+"""Front-door docs checker (CI `docs` job; also run by tests/test_docs.py).
+
+Two checks, stdlib only:
+
+* **intra-repo links** — every relative markdown link in `README.md`,
+  `docs/*.md` and `benchmarks/README.md` must resolve to a file or
+  directory in the repo (external `http(s)://`, `mailto:` and pure
+  `#anchor` links are skipped; `#anchor` suffixes on paths are stripped).
+* **quickstart smoke** (`--run-quickstart`) — extract the first
+  ```python fenced block from `README.md`, write it to a temp file and run
+  it with `PYTHONPATH=src`: the 10-line quickstart the README promises must
+  actually execute.
+
+Exit code is nonzero on any broken link or a failing quickstart, so the
+docs job catches rot the moment a file moves.
+"""
+from __future__ import annotations
+
+import re
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_GLOBS = ("README.md", "docs/*.md", "benchmarks/README.md")
+
+# [text](target) — excluding images' alt-text edge cases is not needed;
+# ![alt](img) matches too and image targets must resolve just the same
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP = ("http://", "https://", "mailto:")
+
+
+def doc_files(root: Path = ROOT) -> list[Path]:
+    out: list[Path] = []
+    for pattern in DOC_GLOBS:
+        out.extend(sorted(root.glob(pattern)))
+    return out
+
+
+def broken_links(root: Path = ROOT) -> list[str]:
+    """All unresolvable intra-repo links as 'file: target' strings."""
+    problems: list[str] = []
+    for doc in doc_files(root):
+        for target in _LINK.findall(doc.read_text(encoding="utf-8")):
+            if target.startswith(_SKIP) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (doc.parent / path).resolve()
+            if not resolved.exists():
+                problems.append(f"{doc.relative_to(root)}: {target}")
+    return problems
+
+
+def quickstart_snippet(root: Path = ROOT) -> str:
+    """The first ```python fenced block in README.md."""
+    readme = (root / "README.md").read_text(encoding="utf-8")
+    m = re.search(r"```python\n(.*?)```", readme, re.DOTALL)
+    if m is None:
+        raise SystemExit("README.md has no ```python quickstart block")
+    return m.group(1)
+
+
+def run_quickstart(root: Path = ROOT) -> int:
+    snippet = quickstart_snippet(root)
+    with tempfile.NamedTemporaryFile("w", suffix="_quickstart.py",
+                                     delete=False) as fh:
+        fh.write(snippet)
+        path = fh.name
+    proc = subprocess.run(
+        [sys.executable, path], cwd=root, text=True, capture_output=True,
+        env={**__import__("os").environ,
+             "PYTHONPATH": str(root / "src"),
+             "JAX_PLATFORMS": "cpu"})
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr)
+    return proc.returncode
+
+
+def main() -> None:
+    if "--run-quickstart" in sys.argv:
+        code = run_quickstart()
+        if code:
+            print(f"FAIL: README quickstart exited {code}", file=sys.stderr)
+        else:
+            print("README quickstart ran clean")
+        sys.exit(code)
+    problems = broken_links()
+    docs = doc_files()
+    if problems:
+        print("broken intra-repo links:", file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        sys.exit(1)
+    print(f"all intra-repo links resolve across {len(docs)} docs")
+
+
+if __name__ == "__main__":
+    main()
