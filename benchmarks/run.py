@@ -12,6 +12,8 @@ Sections:
                     traffic (Watt·s per 1k tokens; persisted-cache resweep)
   router_*        — fleet router across mixed destinations: adaptive
                     energy routing vs round-robin vs single engines
+  traffic_*       — diurnal open-loop workload vs energy-proportional
+                    autoscaling (Watt·s/1k on the full bill incl. idle)
   power_*         — metered Watt·s through the telemetry layer (Fig.5 via
                     trace integration; model calibration vs measurements)
   roofline_*      — §Roofline summary per dry-run cell (when records exist)
@@ -21,10 +23,12 @@ Sections:
 ``--json-dir DIR`` writes the unified BENCH_*.json artifact
 (benchmarks/artifact.py: schema, bench, scenarios, metrics, cache) for
 every benchmark that produces one (fleet, serving, router, power).
-``--bench-out PATH`` writes the serving perf-trajectory artifact to an
-explicit path (CI: ``BENCH_serving.json`` at the repo root, uploaded per
-commit). ``--only a,b`` restricts the run to named sections
-(himeno, ga, fleet, serving, router, power, kernel, e2e, roofline).
+``--bench-out PATH`` writes one perf-trajectory artifact to an explicit
+path: the serving artifact when 'serving' is among the selected sections,
+else the traffic artifact (CI: ``BENCH_serving.json`` / ``BENCH_traffic.json``
+at the repo root, uploaded per commit). ``--only a,b`` restricts the run to
+named sections (himeno, ga, fleet, serving, traffic, router, power, kernel,
+e2e, roofline).
 See benchmarks/README.md for the flag and artifact-schema reference.
 """
 from __future__ import annotations
@@ -35,8 +39,8 @@ import sys
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-SECTIONS = ("himeno", "ga", "fleet", "serving", "router", "power", "kernel",
-            "e2e", "roofline")
+SECTIONS = ("himeno", "ga", "fleet", "serving", "traffic", "router",
+            "power", "kernel", "e2e", "roofline")
 
 
 def main() -> None:
@@ -45,9 +49,10 @@ def main() -> None:
                     help="directory for the per-benchmark BENCH_*.json "
                          "artifacts (unified schema)")
     ap.add_argument("--bench-out", default=None,
-                    help="explicit path for the serving perf-trajectory "
+                    help="explicit path for the serving (or, when serving "
+                         "is not selected, traffic) perf-trajectory "
                          "artifact (e.g. BENCH_serving.json at the repo "
-                         "root; overrides --json-dir for serving)")
+                         "root; overrides --json-dir for that section)")
     ap.add_argument("--only", default=None,
                     help="comma-separated sections to run "
                          f"(default: all of {','.join(SECTIONS)})")
@@ -59,9 +64,11 @@ def main() -> None:
     unknown = only - set(SECTIONS)
     if unknown:
         ap.error(f"unknown --only sections: {sorted(unknown)}")
-    if args.bench_out and "serving" not in only:
-        ap.error("--bench-out writes the serving artifact; include "
-                 "'serving' in --only (or drop --only)")
+    if args.bench_out and not {"serving", "traffic"} & only:
+        ap.error("--bench-out writes the serving or traffic artifact; "
+                 "include one of them in --only (or drop --only)")
+    serving_out = args.bench_out if "serving" in only else None
+    traffic_out = args.bench_out if serving_out is None else None
 
     def art(name: str):
         return os.path.join(jd, f"BENCH_{name}.json") if jd else None
@@ -79,7 +86,10 @@ def main() -> None:
         rows += fleet_bench.run(json_path=art("fleet"))
     if "serving" in only:
         from benchmarks import serving_bench
-        rows += serving_bench.run(json_path=args.bench_out or art("serving"))
+        rows += serving_bench.run(json_path=serving_out or art("serving"))
+    if "traffic" in only:
+        from benchmarks import traffic_bench
+        rows += traffic_bench.run(json_path=traffic_out or art("traffic"))
     if "router" in only:
         from benchmarks import router_bench
         rows += router_bench.run(json_path=art("router"))

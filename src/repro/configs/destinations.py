@@ -48,6 +48,15 @@ class DestinationSpec:
     power: TpuPowerModel
     verify_cost_s: float
     description: str = ""
+    # Energy-proportional power states (FleetRouter autoscaling): waking a
+    # slept slice costs wall-clock seconds (counted against SLOs by the
+    # router), and the DVFS-floor / deep-sleep standby states draw these
+    # fractions of the awake idle floor (p_idle x chips). Small efficiency
+    # parts wake fast; big pods pay real spin-up latency.
+    wake_s: float = 0.0
+    floor_frac: float = 0.4
+    sleep_frac: float = 0.05
+    floor_wake_s: float = 0.0
 
     @property
     def mesh_shape(self) -> dict[str, int]:
@@ -60,35 +69,49 @@ class DestinationSpec:
             n *= v
         return n
 
+    @property
+    def idle_watts(self) -> float:
+        """Awake static draw of the whole slice: the power model's idle
+        floor x chips — exactly the term the telemetry meter's idle-baseline
+        subtraction quantifies, and what an always-on fleet burns per
+        second whether or not a single token flows."""
+        return self.power.p_idle * self.chips
+
 
 def _spec(name: str, mesh_shape: dict[str, int], power: TpuPowerModel,
-          verify_cost_s: float, description: str) -> DestinationSpec:
+          verify_cost_s: float, description: str, wake_s: float = 0.0,
+          floor_wake_s: float = 0.0) -> DestinationSpec:
     return DestinationSpec(name, tuple(sorted(mesh_shape.items())), power,
-                           verify_cost_s, description)
+                           verify_cost_s, description, wake_s=wake_s,
+                           floor_wake_s=floor_wake_s)
 
 
 DESTINATIONS: dict[str, DestinationSpec] = {
     d.name: d for d in (
         _spec("pod_v5e", {"data": 16, "model": 16}, TpuPowerModel(),
               verify_cost_s=256.0,
-              description="balanced 256-chip production slice"),
+              description="balanced 256-chip production slice",
+              wake_s=2e-3, floor_wake_s=1e-4),
         _spec("pod2_v5e", {"data": 16, "model": 16, "pod": 2},
               TpuPowerModel(),
               verify_cost_s=512.0,
-              description="2-pod slice: same silicon, half the step time"),
+              description="2-pod slice: same silicon, half the step time",
+              wake_s=4e-3, floor_wake_s=2e-4),
         _spec("mxu_dense", {"data": 16, "model": 16},
               TpuPowerModel(p_idle=20.0, p_mxu=55.0, p_hbm=19.0,
                             p_ici=10.0),
               verify_cost_s=384.0,
               description="inference-tuned compute part: efficient tensor "
                           "cores and a lean idle floor — prefill's best "
-                          "home, a close second on decode"),
+                          "home, a close second on decode",
+              wake_s=1e-3, floor_wake_s=5e-5),
         _spec("hbm_lp", {"data": 4, "model": 16},
               TpuPowerModel(p_idle=22.0, p_mxu=180.0, p_hbm=14.0,
                             p_ici=8.0),
               verify_cost_s=64.0,
               description="low-power memory-optimized inference part on a "
-                          "small slice — decode's best home, slow prefill"),
+                          "small slice — decode's best home, slow prefill",
+              wake_s=5e-4, floor_wake_s=2e-5),
     )
 }
 

@@ -126,6 +126,62 @@ def dominated_destinations(
     return [c for c in candidates if c not in on_frontier]
 
 
+@dataclass(frozen=True)
+class CapacityPoint:
+    """One destination's operating economics for fleet provisioning: its
+    marginal serving rate (Watt·s per token while busy), its static floor
+    (watts burned per second merely for being awake) and the token
+    throughput it can sustain. What energy-proportional autoscaling ranks
+    and packs."""
+
+    name: str
+    energy_per_token_ws: float
+    static_watts: float
+    capacity_tps: float  # sustainable tokens per second
+    order: int = 0  # catalog position: the deterministic tie-break
+
+
+def amortized_ws_per_token(energy_per_token_ws: float, static_watts: float,
+                           tokens_per_s: float) -> float:
+    """True Watt·s cost of a token on a destination serving
+    ``tokens_per_s``: the marginal rate plus the static floor amortized
+    over the tokens it actually serves. At low utilization the static term
+    dominates — the reason an idle destination is worth spinning down, and
+    the quantity a fleet's Watt·s/1k-token bill actually integrates."""
+    if tokens_per_s <= 0.0:
+        return float("inf")
+    return energy_per_token_ws + static_watts / tokens_per_s
+
+
+def provision_awake_set(candidates: Sequence[CapacityPoint],
+                        demand_tps: float, *, min_awake: int = 1,
+                        headroom: float = 1.0) -> list[str]:
+    """Energy-proportional provisioning: which destinations should be awake
+    to serve ``demand_tps`` tokens/s.
+
+    Candidates are ranked by their amortized Watt·s/token at their own full
+    capacity (a destination that cannot amortize its static floor over many
+    tokens ranks late) and greedily admitted until the awake set's combined
+    capacity covers ``demand_tps x headroom``, with at least ``min_awake``
+    members so the fleet never goes dark. Ties break on catalog order, so
+    the awake set is deterministic for a given demand — the property the
+    autoscaling regression pins."""
+    need = max(demand_tps, 0.0) * max(headroom, 0.0)
+    ranked = sorted(
+        candidates,
+        key=lambda c: (amortized_ws_per_token(
+            c.energy_per_token_ws, c.static_watts, c.capacity_tps),
+            c.order, c.name))
+    awake: list[str] = []
+    cap = 0.0
+    for c in ranked:
+        if len(awake) >= max(min_awake, 0) and cap >= need:
+            break
+        awake.append(c.name)
+        cap += max(c.capacity_tps, 0.0)
+    return awake
+
+
 def narrow(points: Iterable[ParetoPoint], req: Optional[UserRequirement]
            ) -> list[ParetoPoint]:
     """§3.3 narrowing: keep the points satisfying the user requirement."""

@@ -93,9 +93,23 @@ class TrafficMix:
     # when no queued/in-flight request carries one) — joins the narrowing
     # requirement as max_time_s
     slo_time_per_step_s: Optional[float] = None
+    # wall-clock (or virtual-clock) seconds the window covered — set when
+    # the observer is driven on a clock (FleetRouter.observe(now=...));
+    # None on the legacy clockless paths. With it, the mix carries the
+    # observed arrival *rate*, which is what energy-proportional
+    # autoscaling sizes the awake set against.
+    window_s: Optional[float] = None
 
     def weight(self, kind: str) -> float:
         return dict(self.kind_weights).get(kind, 0.0)
+
+    @property
+    def tokens_per_s(self) -> Optional[float]:
+        """Observed token throughput demand over the window (None without
+        a clocked window)."""
+        if self.window_s is None or self.window_s <= 0.0:
+            return None
+        return self.tokens / self.window_s
 
 
 def occupancy_bucket(occupancy: float) -> float:

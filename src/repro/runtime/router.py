@@ -37,6 +37,20 @@ live traffic routed to whichever destination serves each request cheapest.
   :meth:`rebalance` migrates its *queued (never admitted)* requests to
   surviving engines through the normal routing policy. Admitted requests
   are never moved, so no token is ever billed twice.
+* **energy-proportional autoscaling** — every engine carries sleep/wake +
+  DVFS-floor power states whose static watts come from its destination's
+  ``TpuPowerModel`` idle floor (``configs/destinations.py``), charged to
+  the fleet ledger (``EngineStats.idle_ws``) for every second the engine
+  is not stepping. :meth:`scale_to` (and :meth:`plan` with
+  ``autoscale=True`` and a clock) packs the observed arrival rate into the
+  cheapest awake set by amortized Watt·s/token
+  (``core/pareto.py:provision_awake_set``), wakes what demand needs and
+  spins the rest down; wake latency is charged against request SLOs in
+  routing (``eta_s`` adds the wake penalty), and a sleeping engine never
+  admits or bills a token. ``benchmarks/traffic_bench.py`` drives this
+  under a diurnal open-loop workload (``workload/``): the autoscaled
+  fleet must beat always-on on Watt·s/1k-tokens at zero additional SLO
+  violations.
 
 Engines run their real decode loops independently; :meth:`run` drives them
 sequentially, which keeps fleet outputs token-identical to running each
@@ -60,8 +74,8 @@ from repro.core.evaluator import EvalEngine, VectorizedExecutor
 from repro.core.fitness import Measurement, UserRequirement
 from repro.core.ga import GAConfig
 from repro.core.offload_search import CellSpec, FleetResult, search_fleet
-from repro.core.pareto import ParetoPoint, fleet_frontier, \
-    select_operating_point
+from repro.core.pareto import CapacityPoint, ParetoPoint, fleet_frontier, \
+    provision_awake_set, select_operating_point
 from repro.runtime.placement import DEFAULT_CATALOG, TrafficMix, \
     narrowing_requirement, occupancy_bucket, scale_shape, static_placements
 from repro.runtime.serving import EngineStats, Placement, Request, \
@@ -96,6 +110,9 @@ class RouterPlanReport:
     # destinations dominated on EVERY swept kind's fleet frontier
     dominated: list[str] = field(default_factory=list)
     new_measurements: int = 0
+    # autoscaling verdict of this pass (empty when autoscale off / no clock)
+    power_states: dict[str, str] = field(default_factory=dict)
+    demand_tps: Optional[float] = None
 
 
 class FleetRouter:
@@ -130,6 +147,10 @@ class FleetRouter:
         catalog: Optional[dict[str, ShapeSpec]] = None,
         min_kind_weight: float = 0.02,
         prefer: str = "energy",
+        autoscale: bool = False,
+        min_awake: int = 1,
+        headroom: float = 1.25,
+        sleep_after_s: float = 0.0,
     ) -> None:
         if not destinations:
             raise ValueError("need at least one destination")
@@ -143,6 +164,10 @@ class FleetRouter:
         self.require_energy_improvement = require_energy_improvement
         self.min_kind_weight = min_kind_weight
         self.prefer = prefer
+        self.autoscale = autoscale
+        self.min_awake = max(int(min_awake), 1)
+        self.headroom = headroom
+        self.sleep_after_s = sleep_after_s
         self.ga_config = ga_config or GAConfig(population=10, generations=8)
         if eval_engine is None:
             if cache_path:
@@ -171,6 +196,11 @@ class FleetRouter:
             engine.reconfigure(static_placements(
                 arch, d.mesh_shape, catalog=self.catalog, power=d.power,
                 destination=d.name))
+            engine.set_power(idle_watts=d.idle_watts,
+                             floor_frac=d.floor_frac,
+                             sleep_frac=d.sleep_frac,
+                             wake_s=d.wake_s,
+                             floor_wake_s=d.floor_wake_s)
             self._bindings.append(EngineBinding(name, d, engine, i))
         # unique destinations in first-appearance order: what one shared
         # sweep plans over (a homogeneous fleet plans its destination once)
@@ -185,6 +215,8 @@ class FleetRouter:
         self._rr = 0
         self._last: dict[str, EngineStats] = {
             b.name: b.engine.stats.snapshot() for b in self._bindings}
+        self._last_observe_t: Optional[float] = None
+        self._idle_since: dict[str, float] = {}
 
     # -- fleet surface -------------------------------------------------
     @property
@@ -221,44 +253,75 @@ class FleetRouter:
                 + max(req.max_new_tokens - 1, 0)
                 * engine.token_energy_ws("decode"))
 
-    def eta_s(self, binding: EngineBinding, req: Request) -> float:
+    def eta_s(self, binding: EngineBinding, req: Request,
+              now: Optional[float] = None) -> float:
         """Modeled completion latency on this engine: queued backlog spread
-        over its slots, plus the request's own placement-modeled latency."""
+        over its slots, plus the request's own placement-modeled latency.
+        With a clock, a spun-down engine's remaining wake latency joins the
+        estimate — waking a big pod can blow a tight SLO all by itself."""
         eng = binding.engine
         wait = sum(eng.modeled_latency_s(q) for q in eng.queue) \
             / max(eng.slots, 1)
-        return wait + eng.modeled_latency_s(req)
+        wake = eng.wake_penalty_s(now) if now is not None else 0.0
+        return wake + wait + eng.modeled_latency_s(req)
 
-    def _route(self, req: Request, pool: Sequence[EngineBinding]
-               ) -> EngineBinding:
+    def _awake_pool(self, pool: Sequence[EngineBinding],
+                    now: Optional[float]) -> Sequence[EngineBinding]:
+        """Routing candidates under power states: asleep engines never admit.
+        If the whole pool is dark, the cheapest-to-wake member is woken on
+        the spot (the fleet never refuses traffic just because it scaled to
+        zero); its wake latency then shows up in ``eta_s``."""
+        if now is None:
+            return pool
+        for b in pool:
+            b.engine.check_awake(now)
+        awake = [b for b in pool if b.engine.power_state != "asleep"]
+        if awake:
+            return awake
+        b = min(pool, key=lambda x: (x.dest.wake_s, x.order))
+        b.engine.wake(now)
+        self._idle_since.pop(b.name, None)
+        return [b]
+
+    def _route(self, req: Request, pool: Sequence[EngineBinding],
+               now: Optional[float] = None) -> EngineBinding:
         if self.policy == "round_robin":
             b = pool[self._rr % len(pool)]
             self._rr += 1
             return b
+        pool = self._awake_pool(pool, now)
         if req.slo_s is not None:
-            feasible = [b for b in pool if self.eta_s(b, req) <= req.slo_s]
+            feasible = [b for b in pool
+                        if self.eta_s(b, req, now) <= req.slo_s]
             if feasible:
                 pool = feasible
             else:
                 # no engine can hold the SLO: least-late wins (the request
                 # is then counted slo_at_risk at admission)
-                return min(pool, key=lambda b: (self.eta_s(b, req), b.order))
+                return min(pool, key=lambda b: (self.eta_s(b, req, now),
+                                                b.order))
         if self.policy == "latency":
-            return min(pool, key=lambda b: (self.eta_s(b, req), b.order))
+            return min(pool, key=lambda b: (self.eta_s(b, req, now), b.order))
         return min(pool, key=lambda b: (self.marginal_energy_ws(b.engine, req),
-                                        self.eta_s(b, req), b.order))
+                                        self.eta_s(b, req, now), b.order))
 
-    def route(self, req: Request) -> str:
+    def route(self, req: Request, now: Optional[float] = None) -> str:
         """The engine the current policy would admit ``req`` to (pure: no
         state changes except the round-robin cursor on actual submit)."""
         if self.policy == "round_robin":
             return self._bindings[self._rr % len(self._bindings)].name
-        return self._route(req, self._bindings).name
+        return self._route(req, self._bindings, now).name
 
-    def submit(self, req: Request) -> bool:
+    def submit(self, req: Request, now: Optional[float] = None) -> bool:
         """Route and submit; False when the chosen engine rejects (empty
-        prompt, or the overflow policy refusing an oversized one)."""
-        binding = self._route(req, self._bindings)
+        prompt, or the overflow policy refusing an oversized one). With a
+        clock, power states participate: asleep engines are skipped (woken
+        only if the whole fleet is dark) and a floor-state target is woken
+        so the admission actually decodes."""
+        binding = self._route(req, self._bindings, now)
+        if now is not None and binding.engine.power_state != "awake":
+            binding.engine.wake(now)
+            self._idle_since.pop(binding.name, None)
         ok = binding.engine.submit(req)
         if ok:
             self.assignments[req.rid] = binding.name
@@ -280,9 +343,17 @@ class FleetRouter:
         return done
 
     # -- observe (union traffic mix) -----------------------------------
-    def observe(self) -> TrafficMix:
+    def observe(self, now: Optional[float] = None) -> TrafficMix:
         """Union traffic mix across all engines since the last observation
-        (consumes the window, like the per-engine controller's)."""
+        (consumes the window, like the per-engine controller's). With a
+        clock, the mix also carries the window's wall span so
+        ``TrafficMix.tokens_per_s`` yields the observed arrival rate —
+        what autoscaling provisions against."""
+        window: Optional[float] = None
+        if now is not None:
+            if self._last_observe_t is not None:
+                window = max(now - self._last_observe_t, 0.0)
+            self._last_observe_t = now
         prefill = decode = slot_steps = active = 0
         for b in self._bindings:
             cur, last = b.engine.stats, self._last[b.name]
@@ -301,17 +372,83 @@ class FleetRouter:
                           occupancy_bucket=occupancy_bucket(occ),
                           tokens=total,
                           slo_time_per_step_s=min(budgets) if budgets
-                          else None)
+                          else None,
+                          window_s=window)
+
+    # -- energy-proportional autoscaling -------------------------------
+    def engine_capacity_tps(self, binding: EngineBinding) -> float:
+        """Sustainable token throughput of one engine under its current
+        placements: slots over the slowest per-token step time (a full
+        engine emits one token per slot per step)."""
+        rates = [p.time_per_token_s for p in binding.engine.placements.values()
+                 if p.time_per_token_s > 0.0]
+        if not rates:
+            return 0.0
+        return binding.engine.slots / max(rates)
+
+    def capacity_points(self) -> list[CapacityPoint]:
+        """The fleet's provisioning economics, one point per engine (an
+        engine's marginal rate is its most expensive kind — conservative)."""
+        return [CapacityPoint(
+            name=b.name,
+            energy_per_token_ws=max(
+                (p.energy_per_token_ws
+                 for p in b.engine.placements.values()), default=0.0),
+            static_watts=b.dest.idle_watts,
+            capacity_tps=self.engine_capacity_tps(b),
+            order=b.order) for b in self._bindings]
+
+    def scale_to(self, demand_tps: float, now: float) -> dict[str, str]:
+        """Spin the fleet to the cheapest awake set covering ``demand_tps``
+        tokens/s (x ``headroom``): engines in the provisioned set wake, the
+        rest drop to the DVFS floor once idle and deep-sleep after
+        ``sleep_after_s`` continuously idle seconds. An engine with queued
+        or in-flight work is never forced down — it drains first and spins
+        down on a later tick. Returns {engine name: power state}."""
+        for b in self._bindings:
+            b.engine.check_awake(now)
+        target = set(provision_awake_set(
+            self.capacity_points(), demand_tps,
+            min_awake=self.min_awake, headroom=self.headroom))
+        states: dict[str, str] = {}
+        for b in self._bindings:
+            eng = b.engine
+            if b.name in target:
+                self._idle_since.pop(b.name, None)
+                if eng.power_state != "awake":
+                    eng.wake(now)
+            elif eng.idle:
+                if eng.power_state == "awake":
+                    eng.to_floor()
+                    self._idle_since.setdefault(b.name, now)
+                if (eng.power_state == "floor"
+                        and now - self._idle_since.setdefault(b.name, now)
+                        >= self.sleep_after_s):
+                    eng.sleep()
+            states[b.name] = eng.power_state
+        return states
+
+    def power_states(self) -> dict[str, str]:
+        return {b.name: b.engine.power_state for b in self._bindings}
 
     # -- one shared sweep, narrowed per engine -------------------------
-    def plan(self) -> RouterPlanReport:
+    def plan(self, now: Optional[float] = None) -> RouterPlanReport:
         """One shared observe → sweep → narrow → reconfigure pass for the
         whole fleet: a single ``search_fleet`` call over the union mix's
         cells on every destination, then per-engine narrowing on that
         engine's own destination cells. Re-planning the same traffic
-        through the persisted cache performs zero new measurements."""
-        mix = self.observe()
+        through the persisted cache performs zero new measurements.
+
+        With ``autoscale=True`` and a clock, the pass also spins
+        destinations down/up against the window's observed token arrival
+        rate (:meth:`scale_to`) — before the early-out, so a trough window
+        with no traffic still scales the fleet down."""
+        mix = self.observe(now)
         report = RouterPlanReport(mix=mix, fleet=None)
+        if self.autoscale and now is not None \
+                and mix.tokens_per_s is not None:
+            report.demand_tps = mix.tokens_per_s
+            report.power_states = self.scale_to(mix.tokens_per_s, now)
         kinds = [k for k in self.catalog
                  if mix.weight(k) > self.min_kind_weight]
         if not kinds:

@@ -38,6 +38,25 @@ Hooks: ``on_step_end`` fires after every stream step (the controller's
 step-count observation window); ``on_wave_end`` fires after each wave in
 wave mode.
 
+**Power states** (energy-proportional serving): an engine is ``awake``
+(full static draw, serves), at the DVFS ``floor`` (reduced static draw,
+retains state, near-instant wake — cannot step), ``asleep`` (retention
+draw only, slow wake — never admits, never bills a token) or ``waking``
+(paying the wake latency; full draw, cannot step yet). Static watts per
+state come from the destination's ``TpuPowerModel`` idle floor
+(``set_power``); :meth:`accrue_idle` charges them to the separate
+``EngineStats.idle_ws`` ledger — *separate* because the per-token energy
+rates already fold the idle term in during busy steps, so wall-clock static
+draw is only charged for the time an engine is NOT stepping. The fleet
+router spins these states with observed traffic (``FleetRouter.scale_to``)
+and the workload driver (``workload/driver.py``) advances the clock.
+
+**Stream sessions**: ``stream_open`` / ``stream_step`` / ``stream_close``
+expose the slot-stream loop one step at a time, so a simulator can
+interleave open-loop arrivals, power transitions and engine steps on one
+virtual clock. ``run()`` is implemented on top of them and stays
+token-identical to the pre-session loop.
+
 See ``docs/ARCHITECTURE.md`` for how the engine, the placement controller,
 the telemetry loop and the fleet router fit together.
 """
@@ -102,6 +121,14 @@ class EngineStats:
     slot_steps: int = 0  # slots x steps: the occupancy denominator
     active_slot_steps: int = 0  # slots actually decoding a request
     energy_ws: float = 0.0  # modeled Watt·s under the applied placements
+    # static Watt·s charged for wall-clock time spent NOT stepping (awake
+    # gaps, floor, asleep, waking) — the idle power the paper's fleet-scale
+    # claim needs on the ledger; busy steps already carry the idle term
+    # inside their per-token rates, so the two never double-count
+    idle_ws: float = 0.0
+    idle_s: float = 0.0  # seconds the static draw was charged for
+    wakes: int = 0  # asleep/floor -> awake transitions
+    sleeps: int = 0  # awake/floor -> asleep transitions
     reconfigurations: int = 0
 
     @property
@@ -113,6 +140,11 @@ class EngineStats:
     @property
     def total_tokens(self) -> int:
         return self.prefill_tokens + self.decode_tokens
+
+    @property
+    def total_ws(self) -> float:
+        """Serving energy plus static idle energy — the full fleet bill."""
+        return self.energy_ws + self.idle_ws
 
     def snapshot(self) -> "EngineStats":
         return EngineStats(**{f: getattr(self, f)
@@ -135,6 +167,9 @@ class Placement:
     energy_per_token_ws: float
     time_per_token_s: float = 0.0
     source: str = "static"  # static | adaptive
+
+
+POWER_STATES = ("awake", "floor", "asleep", "waking")
 
 
 class ServingEngine:
@@ -179,13 +214,31 @@ class ServingEngine:
         self.on_wave_end: Optional[Callable[["ServingEngine"], None]] = None
         self.on_step_end: Optional[Callable[["ServingEngine"], None]] = None
         self._in_wave = False
+        # power state machine (energy-proportional serving). Watts default
+        # to 0.0 so legacy paths that never call set_power/accrue_idle keep
+        # a byte-identical ledger.
+        self.power_state = "awake"
+        self.idle_watts = 0.0  # awake static draw (p_idle x chips)
+        self.floor_watts = 0.0  # DVFS-floor standby draw
+        self.sleep_watts = 0.0  # deep-sleep retention draw
+        self.wake_s = 0.0  # asleep -> awake latency
+        self.floor_wake_s = 0.0  # floor -> awake latency (near-instant)
+        self._awake_at = 0.0  # when a "waking" engine finishes waking
+        self._stream: Optional[dict] = None  # open stream session state
+        self.last_step_s = 0.0  # modeled duration of the last stream step
         self._step = jax.jit(
             lambda params, state, tokens: T.decode_step(cfg, params, state,
                                                         tokens))
 
     def submit(self, req: Request) -> bool:
-        """Admit a request; False when rejected (empty prompt, or the
-        overflow policy refusing a prompt that cannot fit)."""
+        """Admit a request; False when rejected (empty prompt, a prompt the
+        overflow policy refuses, or the engine being asleep — a sleeping
+        engine never admits)."""
+        if self.power_state == "asleep":
+            req.status = "rejected"
+            self.stats.rejected += 1
+            self.rejected.append(req)
+            return False
         if not req.prompt:  # nothing to condition on; truncation can't help
             req.status = "rejected"
             self.stats.rejected += 1
@@ -204,6 +257,115 @@ class ServingEngine:
             self.stats.truncated += 1
         self.queue.append(req)
         return True
+
+    # ------------------------------------------------------------------
+    # Power states (energy-proportional serving)
+    # ------------------------------------------------------------------
+    def set_power(self, *, idle_watts: float, floor_frac: float = 0.4,
+                  sleep_frac: float = 0.05, wake_s: float = 0.0,
+                  floor_wake_s: float = 0.0) -> None:
+        """Install the destination's static power levels: ``idle_watts`` is
+        the awake floor (the power model's ``p_idle`` x chips — exactly the
+        term the meter's idle-baseline subtraction quantifies), the floor
+        and sleep states draw the given fractions of it, and waking from
+        deep sleep costs ``wake_s`` seconds (``floor_wake_s`` from the DVFS
+        floor)."""
+        if idle_watts < 0.0 or wake_s < 0.0 or floor_wake_s < 0.0:
+            raise ValueError("watts and wake latencies must be nonnegative")
+        self.idle_watts = idle_watts
+        self.floor_watts = idle_watts * floor_frac
+        self.sleep_watts = idle_watts * sleep_frac
+        self.wake_s = wake_s
+        self.floor_wake_s = floor_wake_s
+
+    def static_watts(self) -> float:
+        """Static draw of the current power state (what one second of NOT
+        stepping costs). A waking engine already burns the full awake floor
+        — spin-up is not free."""
+        if self.power_state == "asleep":
+            return self.sleep_watts
+        if self.power_state == "floor":
+            return self.floor_watts
+        return self.idle_watts  # awake | waking
+
+    @property
+    def idle(self) -> bool:
+        """No queued and no admitted-unfinished work."""
+        return not self.queue and not self.active
+
+    def sleep(self) -> None:
+        """awake/floor -> asleep. Only an *idle* engine may sleep: queued or
+        in-flight requests pin it awake (the router drains first)."""
+        if self.power_state == "asleep":
+            return
+        if not self.idle:
+            raise RuntimeError("cannot sleep with queued or in-flight "
+                               "requests")
+        self.power_state = "asleep"
+        self.stats.sleeps += 1
+
+    def to_floor(self) -> None:
+        """awake -> floor (DVFS-floor standby: reduced static draw, state
+        retained, near-instant wake). Requires idleness like sleep — the
+        floor cannot step."""
+        if self.power_state == "floor":
+            return
+        if self.power_state != "awake":
+            raise RuntimeError(f"to_floor from {self.power_state!r}")
+        if not self.idle:
+            raise RuntimeError("cannot drop to the floor with queued or "
+                               "in-flight requests")
+        self.power_state = "floor"
+
+    def wake(self, now: float) -> float:
+        """Start (or finish) waking; returns the time the engine is awake.
+        Waking from the DVFS floor costs ``floor_wake_s``, from deep sleep
+        ``wake_s``; an awake engine returns ``now`` unchanged."""
+        if self.power_state == "awake":
+            return now
+        if self.power_state == "waking":
+            return self._awake_at
+        latency = (self.floor_wake_s if self.power_state == "floor"
+                   else self.wake_s)
+        self.stats.wakes += 1
+        if latency <= 0.0:
+            self.power_state = "awake"
+            self._awake_at = now
+            return now
+        self.power_state = "waking"
+        self._awake_at = now + latency
+        return self._awake_at
+
+    def check_awake(self, now: float) -> bool:
+        """Complete a pending wake whose latency has elapsed; True when the
+        engine is awake (can step) at ``now``."""
+        if self.power_state == "waking" and now >= self._awake_at:
+            self.power_state = "awake"
+        return self.power_state == "awake"
+
+    def wake_penalty_s(self, now: float) -> float:
+        """Seconds before this engine could serve a request routed at
+        ``now`` — what SLO-aware routing charges a spun-down destination."""
+        if self.power_state == "awake":
+            return 0.0
+        if self.power_state == "waking":
+            return max(self._awake_at - now, 0.0)
+        if self.power_state == "floor":
+            return self.floor_wake_s
+        return self.wake_s
+
+    def accrue_idle(self, dt: float) -> float:
+        """Charge ``dt`` seconds of the current state's static draw to the
+        idle ledger; returns the Watt·s added. The driver calls this for
+        exactly the wall-clock intervals the engine did NOT step in, so the
+        per-token rates (which fold idle in during steps) never
+        double-count."""
+        if dt <= 0.0:
+            return 0.0
+        ws = self.static_watts() * dt
+        self.stats.idle_ws += ws
+        self.stats.idle_s += dt
+        return ws
 
     # ------------------------------------------------------------------
     def reconfigure(self, placements: Mapping[str, Placement]) -> None:
@@ -303,84 +465,137 @@ class ServingEngine:
         return None
 
     # ------------------------------------------------------------------
-    # Slot-stream scheduler
+    # Slot-stream scheduler (session API: open / step / close)
     # ------------------------------------------------------------------
-    def _run_stream(self, max_steps: int) -> list[Request]:
-        state = T.init_decode_state(self.cfg, self.slots, self.max_len)
-        slot_req: list[Optional[Request]] = [None] * self.slots
-        cursors = [0] * self.slots
-        # placement epoch captured at admission: tokens of this slot are
-        # costed under these rates no matter what reconfigure does later
-        slot_epoch: list[dict[str, Placement]] = [{} for _ in range(self.slots)]
-        done: list[Request] = []
-        for _ in range(max_steps):
-            # admission: every free slot takes the next queued request — a
-            # slot freed on step t serves its new request on step t+1
-            newly = []
-            for i in range(self.slots):
-                if slot_req[i] is None and self.queue:
-                    req = self.queue.popleft()
-                    slot_req[i] = req
-                    cursors[i] = 0
-                    slot_epoch[i] = dict(self.placements)
-                    self._admit(req)
-                    newly.append(i)
-            if not any(r is not None for r in slot_req):
-                break
-            if newly:
-                mask = np.zeros((self.slots,), bool)
-                mask[newly] = True
-                state = T.reset_decode_slots(self.cfg, state,
-                                             jnp.asarray(mask))
-            tokens = np.zeros((self.slots,), np.int32)
-            for i, req in enumerate(slot_req):
-                if req is None:
-                    continue
-                c = cursors[i]
-                tokens[i] = (req.prompt[c] if c < len(req.prompt)
-                             else req.output[-1])
-            logits, state = self._step(self.params, state,
-                                       jnp.asarray(tokens))
-            self.stats.steps += 1
-            self.stats.slot_steps += self.slots
-            self.stats.active_slot_steps += sum(r is not None
-                                                for r in slot_req)
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))
-            for i, req in enumerate(slot_req):
-                if req is None:
-                    continue
-                c = cursors[i]
-                cursors[i] += 1
-                # the step consuming a prompt token is PREFILL — including
-                # the one consuming the last prompt token (which already
-                # emits the first output token): a length-L prompt
-                # contributes exactly L prefill tokens
-                if c < len(req.prompt):
-                    self.stats.prefill_tokens += 1
-                    self.stats.energy_ws += self._token_energy(
-                        "prefill", slot_epoch[i])
-                else:
-                    self.stats.decode_tokens += 1
-                    self.stats.energy_ws += self._token_energy(
-                        "decode", slot_epoch[i])
-                if c >= len(req.prompt) - 1:  # this step emitted a token
-                    tok = int(nxt[i])
-                    req.output.append(tok)
-                    reason = self._finish_reason(req, tok, cursors[i])
-                    if reason is not None:
-                        self._finish(req, reason)
-                        done.append(req)
-                        slot_req[i] = None  # freed; refilled next step
-            if self.on_step_end is not None:
-                self.on_step_end(self)
-        # Defensive: the submit guard bounds every request to < max_len
-        # steps, so exhaustion only happens on an under-budgeted max_steps —
-        # mark survivors rather than launder them as done.
+    def stream_open(self) -> None:
+        """Start a slot-stream session: one shared decode state plus the
+        per-slot bookkeeping, held on the engine so a simulator can step it
+        incrementally across submits, power transitions and virtual time."""
+        if self._stream is not None:
+            raise RuntimeError("stream session already open")
+        self._stream = {
+            "state": T.init_decode_state(self.cfg, self.slots, self.max_len),
+            "slot_req": [None] * self.slots,
+            "cursors": [0] * self.slots,
+            # placement epoch captured at admission: tokens of this slot are
+            # costed under these rates no matter what reconfigure does later
+            "epoch": [{} for _ in range(self.slots)],
+        }
+
+    def stream_busy(self) -> bool:
+        """True while the open session has queued or in-slot work."""
+        if self._stream is None:
+            return False
+        return bool(self.queue) \
+            or any(r is not None for r in self._stream["slot_req"])
+
+    def stream_step(self) -> Optional[list[Request]]:
+        """One admission + decode step of the open session. Returns the
+        requests finished by this step ([] for a step that finished none),
+        or None when no step ran: nothing to serve, or the engine is not
+        awake — a non-awake engine never admits a slot, never decodes and
+        never bills a token. ``last_step_s`` carries the step's modeled
+        duration (the max per-token time across active slots under their
+        admission epochs) for virtual-clock drivers."""
+        if self._stream is None:
+            raise RuntimeError("no open stream session")
+        if self.power_state != "awake":
+            return None
+        s = self._stream
+        slot_req, cursors, slot_epoch = s["slot_req"], s["cursors"], s["epoch"]
+        # admission: every free slot takes the next queued request — a
+        # slot freed on step t serves its new request on step t+1
+        newly = []
+        for i in range(self.slots):
+            if slot_req[i] is None and self.queue:
+                req = self.queue.popleft()
+                slot_req[i] = req
+                cursors[i] = 0
+                slot_epoch[i] = dict(self.placements)
+                self._admit(req)
+                newly.append(i)
+        if not any(r is not None for r in slot_req):
+            return None
+        if newly:
+            mask = np.zeros((self.slots,), bool)
+            mask[newly] = True
+            s["state"] = T.reset_decode_slots(self.cfg, s["state"],
+                                              jnp.asarray(mask))
+        step_s = 0.0
+        tokens = np.zeros((self.slots,), np.int32)
         for i, req in enumerate(slot_req):
+            if req is None:
+                continue
+            c = cursors[i]
+            tokens[i] = (req.prompt[c] if c < len(req.prompt)
+                         else req.output[-1])
+            kind = "prefill" if c < len(req.prompt) else "decode"
+            p = slot_epoch[i].get(kind)
+            if p is not None:
+                step_s = max(step_s, p.time_per_token_s)
+        self.last_step_s = step_s
+        logits, s["state"] = self._step(self.params, s["state"],
+                                        jnp.asarray(tokens))
+        self.stats.steps += 1
+        self.stats.slot_steps += self.slots
+        self.stats.active_slot_steps += sum(r is not None for r in slot_req)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        done: list[Request] = []
+        for i, req in enumerate(slot_req):
+            if req is None:
+                continue
+            c = cursors[i]
+            cursors[i] += 1
+            # the step consuming a prompt token is PREFILL — including
+            # the one consuming the last prompt token (which already
+            # emits the first output token): a length-L prompt
+            # contributes exactly L prefill tokens
+            if c < len(req.prompt):
+                self.stats.prefill_tokens += 1
+                self.stats.energy_ws += self._token_energy(
+                    "prefill", slot_epoch[i])
+            else:
+                self.stats.decode_tokens += 1
+                self.stats.energy_ws += self._token_energy(
+                    "decode", slot_epoch[i])
+            if c >= len(req.prompt) - 1:  # this step emitted a token
+                tok = int(nxt[i])
+                req.output.append(tok)
+                reason = self._finish_reason(req, tok, cursors[i])
+                if reason is not None:
+                    self._finish(req, reason)
+                    done.append(req)
+                    slot_req[i] = None  # freed; refilled next step
+        if self.on_step_end is not None:
+            self.on_step_end(self)
+        return done
+
+    def stream_close(self) -> None:
+        """End the session. In-slot requests are marked ``incomplete`` (the
+        submit guard bounds every request to < max_len steps, so a closing
+        session only strands work when its step budget was under-provisioned
+        — mark survivors rather than launder them as done); queued requests
+        stay queued."""
+        if self._stream is None:
+            return
+        for req in self._stream["slot_req"]:
             if req is not None:
                 req.status = "incomplete"
                 self.stats.incomplete += 1
                 self.active.remove(req)
+        self._stream = None
+
+    def _run_stream(self, max_steps: int) -> list[Request]:
+        self.stream_open()
+        done: list[Request] = []
+        try:
+            for _ in range(max_steps):
+                finished = self.stream_step()
+                if finished is None:  # nothing active (or not awake)
+                    break
+                done.extend(finished)
+        finally:
+            self.stream_close()
         return done
 
     # ------------------------------------------------------------------

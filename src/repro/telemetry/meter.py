@@ -133,6 +133,17 @@ class MeterReading:
         return self.total_ws / self.duration_s if self.duration_s else 0.0
 
     @property
+    def idle_ws(self) -> float:
+        """Watt·s of the established idle baseline over the session: the
+        floor energy ``net_ws`` subtracts (``idle_watts x duration``). This
+        is the same static-draw quantity the serving fleet charges a
+        spun-down engine (``EngineStats.idle_ws``) — the cross-check the
+        energy-proportional tests pin: an engine held in one power state
+        for T seconds books exactly what a metered constant trace at that
+        state's watts integrates to."""
+        return self.idle_watts * self.duration_s
+
+    @property
     def net_ws(self) -> float:
         """Total Watt·s above the idle floor — the paper's reported delta."""
         return max(self.total_ws - self.idle_watts * self.duration_s, 0.0)

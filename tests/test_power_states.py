@@ -1,0 +1,392 @@
+"""Energy-proportional power states: engine state machine, idle ledger,
+fleet autoscaling invariants, and the telemetry cross-check.
+
+The non-negotiables (fuzzed over seeded op sequences, not just examples):
+
+* a **sleeping engine never admits and never bills a token**;
+* the fleet ledger's ``total_ws`` (serving + idle energy) is **monotone
+  nondecreasing** under any op sequence;
+* wake -> admit -> drain roundtrips leave ``fleet_stats`` equal to the
+  field-wise sum of the engine ledgers;
+* an engine asleep for T seconds books exactly ``sleep_watts x T`` — the
+  same number a metered constant trace at that draw integrates to
+  (``telemetry/meter.py`` idle-baseline subtraction nets it to zero).
+
+Pure state-machine tests build engines with no model (``cfg=params=None``
+— ``jax.jit`` is lazy, and these tests never step); decode-path tests use
+the shared reduced model fixture.
+"""
+import math
+import random
+
+import jax
+import pytest
+
+from repro.configs import DESTINATIONS, get_config, mixed_fleet, reduced
+from repro.core.pareto import (
+    CapacityPoint, amortized_ws_per_token, provision_awake_set,
+)
+from repro import models as M
+from repro.runtime import FleetRouter, Request, ServingEngine
+from repro.runtime.serving import POWER_STATES
+
+
+def bare_engine(**power) -> ServingEngine:
+    e = ServingEngine(None, None, slots=2, max_len=16)
+    if power:
+        e.set_power(**power)
+    return e
+
+
+def req(rid=0, prompt_len=3, gen=2):
+    return Request(rid=rid, prompt=[1 + (rid + j) % 7
+                                    for j in range(prompt_len)],
+                   max_new_tokens=gen)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduced(get_config("llama3.2-3b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# State machine
+# ---------------------------------------------------------------------------
+
+
+def test_set_power_derives_floor_and_sleep_watts():
+    e = bare_engine(idle_watts=100.0, floor_frac=0.4, sleep_frac=0.05,
+                    wake_s=2.0, floor_wake_s=0.1)
+    assert e.idle_watts == 100.0
+    assert e.floor_watts == pytest.approx(40.0)
+    assert e.sleep_watts == pytest.approx(5.0)
+    with pytest.raises(ValueError):
+        e.set_power(idle_watts=-1.0)
+    with pytest.raises(ValueError):
+        e.set_power(idle_watts=1.0, wake_s=-0.5)
+
+
+def test_static_watts_per_state():
+    e = bare_engine(idle_watts=100.0, wake_s=1.0, floor_wake_s=0.1)
+    assert e.static_watts() == 100.0  # awake
+    e.to_floor()
+    assert e.static_watts() == pytest.approx(40.0)
+    e.wake(0.0)  # waking burns the full awake floor: spin-up is not free
+    assert e.power_state == "waking" and e.static_watts() == 100.0
+    assert e.check_awake(0.1)
+    e.sleep()
+    assert e.static_watts() == pytest.approx(5.0)
+
+
+def test_sleeping_engine_never_admits():
+    e = bare_engine(idle_watts=50.0)
+    e.sleep()
+    r = req()
+    assert not e.submit(r)
+    assert r.status == "rejected"
+    assert e.stats.rejected == 1 and not e.queue
+
+
+def test_sleep_and_floor_require_idleness():
+    e = bare_engine(idle_watts=50.0)
+    assert e.submit(req())
+    with pytest.raises(RuntimeError):
+        e.sleep()
+    with pytest.raises(RuntimeError):
+        e.to_floor()
+    e.queue.clear()
+    e.sleep()
+    with pytest.raises(RuntimeError):
+        e.to_floor()  # only an awake engine can drop to the floor
+
+
+def test_wake_latency_and_penalties():
+    e = bare_engine(idle_watts=50.0, wake_s=2.0, floor_wake_s=0.25)
+    e.sleep()
+    assert e.wake_penalty_s(10.0) == 2.0
+    assert e.wake(10.0) == 12.0
+    assert e.power_state == "waking"
+    assert e.wake(10.5) == 12.0  # re-waking doesn't restart the clock
+    assert e.wake_penalty_s(11.0) == pytest.approx(1.0)
+    assert not e.check_awake(11.9)
+    assert e.check_awake(12.0) and e.power_state == "awake"
+    assert e.wake_penalty_s(12.0) == 0.0 and e.wake(13.0) == 13.0
+    assert e.stats.wakes == 1
+
+    e.to_floor()
+    assert e.wake_penalty_s(0.0) == 0.25
+    assert e.wake(20.0) == 20.25  # floor wakes via the cheap path
+    # zero-latency wake is immediate
+    z = bare_engine(idle_watts=50.0, wake_s=0.0)
+    z.sleep()
+    assert z.wake(5.0) == 5.0 and z.power_state == "awake"
+
+
+def test_accrue_idle_exact_arithmetic():
+    e = bare_engine(idle_watts=120.0, sleep_frac=0.05)
+    assert e.accrue_idle(0.5) == pytest.approx(60.0)
+    e.sleep()
+    assert e.accrue_idle(2.5) == pytest.approx(120.0 * 0.05 * 2.5)
+    assert e.stats.idle_ws == pytest.approx(60.0 + 15.0)
+    assert e.stats.idle_s == pytest.approx(3.0)
+    assert e.accrue_idle(0.0) == 0.0 and e.accrue_idle(-1.0) == 0.0
+    assert e.stats.total_ws == pytest.approx(e.stats.idle_ws)  # no tokens
+
+
+# ---------------------------------------------------------------------------
+# Fuzz: seeded op sequences
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fuzzed_op_sequences_hold_the_ledger_invariants(seed):
+    """Random walks over {submit, drain, sleep, floor, wake, check, accrue}:
+    the state stays legal, a sleeping engine never queues a request, and
+    total_ws never decreases."""
+    rng = random.Random(seed)
+    e = bare_engine(idle_watts=80.0, wake_s=rng.choice([0.0, 0.5]),
+                    floor_wake_s=0.01)
+    now, rid = 0.0, 0
+    prev_total = e.stats.total_ws
+    for _ in range(300):
+        op = rng.randrange(7)
+        if op == 0:
+            r = req(rid)
+            rid += 1
+            admitted = e.submit(r)
+            assert admitted == (e.power_state != "asleep")
+            if not admitted:
+                assert r.status == "rejected" and r not in e.queue
+        elif op == 1 and e.queue:
+            e.queue.clear()  # drain without decoding (no model here)
+        elif op == 2 and e.idle:
+            e.sleep()
+        elif op == 3 and e.idle and e.power_state == "awake":
+            e.to_floor()
+        elif op == 4:
+            e.wake(now)
+        elif op == 5:
+            now += rng.random()
+            e.check_awake(now)
+        else:
+            e.accrue_idle(rng.random())
+        assert e.power_state in POWER_STATES
+        assert e.stats.total_ws >= prev_total  # monotone nondecreasing
+        assert e.stats.idle_ws >= 0.0 and e.stats.idle_s >= 0.0
+        prev_total = e.stats.total_ws
+    assert e.stats.wakes >= e.stats.sleeps - 1  # every sleep needs a wake
+
+
+# ---------------------------------------------------------------------------
+# Decode path: a non-awake engine never bills
+# ---------------------------------------------------------------------------
+
+
+def test_non_awake_engine_never_steps_or_bills(small_model):
+    cfg, params = small_model
+    e = ServingEngine(cfg, params, slots=2, max_len=16)
+    e.set_power(idle_watts=50.0, wake_s=1.0)
+    e.sleep()
+    e.stream_open()
+    before = e.stats.snapshot()
+    assert e.stream_step() is None  # asleep: no step, no admission
+    assert e.wake(0.0) == 1.0 and e.power_state == "waking"
+    assert e.submit(req(0))  # waking may queue...
+    assert e.stream_step() is None  # ...but still cannot step
+    for f in ("steps", "admissions", "prefill_tokens", "decode_tokens",
+              "energy_ws"):
+        assert getattr(e.stats, f) == getattr(before, f)
+    assert e.check_awake(1.0)
+    stepped = e.stream_step()
+    assert stepped == [] and e.stats.steps == 1 and e.stats.admissions == 1
+    while e.stream_busy():
+        e.stream_step()
+    e.stream_close()
+    assert e.stats.completed == 1 and e.stats.incomplete == 0
+
+
+# ---------------------------------------------------------------------------
+# Provisioning arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_amortized_cost_and_awake_set_packing():
+    assert amortized_ws_per_token(0.5, 100.0, 200.0) == pytest.approx(1.0)
+    assert amortized_ws_per_token(0.5, 100.0, 0.0) == math.inf
+    pts = [CapacityPoint("big", 0.9, 30000.0, 100000.0, order=0),
+           CapacityPoint("mid", 0.4, 5000.0, 50000.0, order=1),
+           CapacityPoint("small", 0.35, 1400.0, 14000.0, order=2)]
+    # ranking by amortized cost at own capacity: small < mid < big
+    assert provision_awake_set(pts, 0.0) == ["small"]
+    assert provision_awake_set(pts, 10000.0) == ["small"]
+    assert provision_awake_set(pts, 30000.0) == ["small", "mid"]
+    assert provision_awake_set(pts, 30000.0, headroom=3.0) == \
+        ["small", "mid", "big"]
+    assert provision_awake_set(pts, 0.0, min_awake=2) == ["small", "mid"]
+    # deterministic tie-break on catalog order
+    tied = [CapacityPoint("b", 0.5, 100.0, 1000.0, order=1),
+            CapacityPoint("a", 0.5, 100.0, 1000.0, order=0)]
+    assert provision_awake_set(tied, 0.0) == ["a"]
+
+
+def test_destination_idle_watts_and_wake_latencies():
+    for d in mixed_fleet():
+        assert d.idle_watts == d.power.p_idle * d.chips
+        assert d.wake_s > d.floor_wake_s >= 0.0
+    # the big pod pays the slowest wake, the low-power part the fastest
+    assert DESTINATIONS["pod2_v5e"].wake_s > DESTINATIONS["hbm_lp"].wake_s
+
+
+# ---------------------------------------------------------------------------
+# Fleet: wake -> admit -> drain roundtrips
+# ---------------------------------------------------------------------------
+
+
+def make_router(cfg, params, tmp_path, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("max_len", 32)
+    return FleetRouter(cfg, params, mixed_fleet(), arch="llama3.2-3b",
+                       cache_path=str(tmp_path / "cache.jsonl"), **kw)
+
+
+def _sum_engine_stats(router):
+    from repro.runtime.serving import EngineStats
+
+    total = EngineStats()
+    for b in router.bindings:
+        for f in EngineStats.__dataclass_fields__:
+            setattr(total, f, getattr(total, f) + getattr(b.engine.stats, f))
+    return total
+
+
+def test_scale_to_zero_then_wake_admit_drain_roundtrip(small_model, tmp_path):
+    cfg, params = small_model
+    router = make_router(cfg, params, tmp_path, autoscale=True,
+                         min_awake=1, sleep_after_s=0.0)
+    states = router.scale_to(0.0, now=0.0)
+    awake = [n for n, s in states.items() if s == "awake"]
+    assert len(awake) == 1  # min_awake floor holds
+    assert sorted(states.values()).count("asleep") == 2
+    asleep_before = {n: router.engines[n].stats.snapshot()
+                     for n, s in states.items() if s == "asleep"}
+
+    # submits with a clock route around the sleeping engines
+    reqs = [req(i, prompt_len=4, gen=3) for i in range(6)]
+    for r in reqs:
+        assert router.submit(r, now=0.0)
+    done = router.run()
+    assert len(done) == 6
+    for n, before in asleep_before.items():
+        eng = router.engines[n]
+        if eng.power_state == "asleep":  # never woken: never billed a token
+            assert eng.stats.prefill_tokens == before.prefill_tokens
+            assert eng.stats.decode_tokens == before.decode_tokens
+            assert eng.stats.energy_ws == before.energy_ws
+
+    # fleet ledger == field-wise engine sum, through the whole roundtrip
+    fleet = router.fleet_stats()
+    manual = _sum_engine_stats(router)
+    for f in type(fleet).__dataclass_fields__:
+        assert getattr(fleet, f) == getattr(manual, f)
+
+    # scale back up: demand beyond one engine's capacity wakes more
+    total_cap = sum(router.engine_capacity_tps(b) for b in router.bindings)
+    states = router.scale_to(total_cap, now=1.0)
+    assert all(s in ("awake", "waking") for s in states.values())
+    before_total = router.fleet_stats().total_ws
+    for b in router.bindings:
+        b.engine.check_awake(10.0)
+        b.engine.accrue_idle(0.1)
+    assert router.fleet_stats().total_ws > before_total  # monotone
+
+
+def test_engines_with_work_are_never_forced_down(small_model, tmp_path):
+    cfg, params = small_model
+    router = make_router(cfg, params, tmp_path, autoscale=True,
+                         sleep_after_s=0.0)
+    for i in range(6):  # load every engine
+        router.bindings[i % 3].engine.submit(req(i))
+    states = router.scale_to(0.0, now=0.0)
+    assert all(s == "awake" for s in states.values())  # work pins awake
+    router.run()
+    states = router.scale_to(0.0, now=1.0)  # drained: now they may spin down
+    assert sorted(states.values()).count("asleep") == 2
+
+
+def test_route_wakes_the_fleet_when_everything_sleeps(small_model, tmp_path):
+    cfg, params = small_model
+    router = make_router(cfg, params, tmp_path, autoscale=True, min_awake=1,
+                         sleep_after_s=0.0)
+    router.scale_to(0.0, now=0.0)
+    for b in router.bindings:  # force even the min_awake member down
+        if b.engine.power_state == "awake":
+            b.engine.to_floor()
+            b.engine.sleep()
+    assert all(b.engine.power_state == "asleep" for b in router.bindings)
+    r = req(0)
+    assert router.submit(r, now=0.0)  # wakes the cheapest-to-wake engine
+    woken = [b for b in router.bindings
+             if b.engine.power_state in ("awake", "waking")]
+    assert len(woken) == 1
+    assert woken[0].dest.wake_s == min(b.dest.wake_s
+                                       for b in router.bindings)
+
+
+def test_observe_with_clock_yields_arrival_rate(small_model, tmp_path):
+    cfg, params = small_model
+    router = make_router(cfg, params, tmp_path)
+    assert router.observe(now=0.0).tokens_per_s is None  # no window yet
+    for i in range(4):
+        router.submit(req(i, prompt_len=4, gen=3), now=0.0)
+    router.run()
+    mix = router.observe(now=2.0)
+    assert mix.window_s == pytest.approx(2.0)
+    assert mix.tokens_per_s == pytest.approx(mix.tokens / 2.0)
+    assert router.observe().window_s is None  # legacy call stays clockless
+
+
+def test_eta_includes_wake_penalty(small_model, tmp_path):
+    cfg, params = small_model
+    router = make_router(cfg, params, tmp_path)
+    b = router.bindings[0]
+    r = req(0)
+    base = router.eta_s(b, r, now=0.0)
+    b.engine.to_floor()
+    b.engine.sleep()
+    assert router.eta_s(b, r, now=0.0) == pytest.approx(
+        base + b.dest.wake_s)
+    assert router.eta_s(b, r) == pytest.approx(base)  # clockless: no penalty
+
+
+# ---------------------------------------------------------------------------
+# Telemetry cross-check (idle-baseline accounting)
+# ---------------------------------------------------------------------------
+
+
+def test_slept_engine_books_exactly_the_metered_baseline():
+    """Engine asleep for T books sleep_watts x T — identical to the
+    trapezoid integral of a constant ModeledSampler trace at that draw, and
+    the meter's idle-baseline subtraction nets that span to zero."""
+    from repro.telemetry.meter import meter_trace, trapezoid_ws
+    from repro.telemetry.sampler import ModeledSampler, PowerPhase
+
+    idle_watts, sleep_frac, T = 120.0, 0.05, 2.5
+    e = bare_engine(idle_watts=idle_watts, sleep_frac=sleep_frac)
+    e.sleep()
+    booked = e.accrue_idle(T)
+    assert booked == pytest.approx(idle_watts * sleep_frac * T)
+    assert e.stats.idle_ws == pytest.approx(booked)
+    assert e.stats.idle_s == pytest.approx(T)
+
+    draw = idle_watts * sleep_frac
+    trace = ModeledSampler([PowerPhase("asleep", T, {"idle": draw})],
+                           hz=200.0).trace()
+    assert trapezoid_ws(trace) == pytest.approx(booked, rel=1e-9)
+
+    reading = meter_trace(trace, marks=[("asleep", 0.0, T)],
+                          idle_watts=draw)
+    assert reading.idle_ws == pytest.approx(e.stats.idle_ws, rel=1e-9)
+    assert reading.net_ws == pytest.approx(0.0, abs=1e-9)
+    assert reading.span_net_ws("asleep") == pytest.approx(0.0, abs=1e-9)

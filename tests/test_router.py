@@ -347,3 +347,81 @@ def test_dominated_destinations_keeps_candidate_order():
                                  lambda p: dest(p.cell))
     assert out == ["cpu", "edge"]
     assert dominated_destinations([], frontier, lambda p: dest(p.cell)) == []
+
+
+# ---------------------------------------------------------------------------
+# Autoscaling regression: the clockless path reproduces PR 5 exactly
+# ---------------------------------------------------------------------------
+
+
+def test_always_on_pins_pre_autoscaling_outputs(small_model, tmp_path):
+    """Golden regression for the energy-proportional change: serving the
+    standard mixed scenario WITHOUT a clock must reproduce the pre-
+    autoscaling ledger token for token — integer counts pinned to the
+    values the pre-power-state router produced, power plumbing fully inert
+    (zero idle Watt·s, zero transitions, every engine awake)."""
+    cfg, params = small_model
+    router = make_router(cfg, params, tmp_path)
+    reqs = mixed_requests(8)
+    for r in reqs:
+        assert router.submit(r)
+    done = router.run()
+    s = router.fleet_stats()
+    assert (s.completed, s.prefill_tokens, s.decode_tokens, s.steps,
+            s.admissions) == (8, 88, 40, 64, 8)
+    assert [router.assignments[i] for i in range(8)] == \
+        ["mxu_dense", "hbm_lp"] * 4
+    assert len(done) == 8
+    assert s.idle_ws == 0.0 and s.idle_s == 0.0
+    assert s.wakes == 0 and s.sleeps == 0
+    assert all(st == "awake" for st in router.power_states().values())
+
+
+def test_autoscale_flag_changes_nothing_without_a_clock(small_model,
+                                                        tmp_path):
+    """autoscale=True but no `now` anywhere: token-identical outputs and a
+    field-identical ledger vs the default router — the PR 5 benchmarks
+    (which never pass a clock) cannot move."""
+    cfg, params = small_model
+    legacy = make_router(cfg, params, tmp_path, dests=MIXED)
+    scaled = make_router(cfg, params, tmp_path, dests=MIXED,
+                         autoscale=True, min_awake=2, headroom=3.0,
+                         sleep_after_s=0.5)
+    outs = {}
+    for router in (legacy, scaled):
+        for r in mixed_requests(8):
+            router.submit(r)
+        done = router.run()
+        router.plan()  # clockless plan: no scaling, no power_states verdict
+        outs[router is scaled] = {r.rid: list(r.output) for r in done}
+        assert router.history[-1].power_states == {}
+        assert router.history[-1].demand_tps is None
+    assert outs[False] == outs[True]
+    a, b = legacy.fleet_stats(), scaled.fleet_stats()
+    for f in type(a).__dataclass_fields__:
+        assert getattr(a, f) == getattr(b, f), f
+    assert a.idle_ws == 0.0 and a.wakes == 0 and a.sleeps == 0
+
+
+def test_plan_with_clock_scales_the_fleet(small_model, tmp_path):
+    """plan(now=...) is the autoscaling entry point: once an observation
+    window exists, the pass records a demand rate and spins the fleet to
+    the provisioned awake set — including scale-DOWN on an all-idle window
+    (the early-out must not skip it)."""
+    cfg, params = small_model
+    router = make_router(cfg, params, tmp_path, autoscale=True,
+                         min_awake=1, sleep_after_s=0.0,
+                         ga_config=GA)
+    router.observe(now=0.0)  # open the observation window
+    for r in mixed_requests(6):
+        router.submit(r, now=0.0)
+    router.run()
+    report = router.plan(now=1.0)
+    assert report.mix.window_s == pytest.approx(1.0)
+    assert report.demand_tps == pytest.approx(report.mix.tokens / 1.0)
+    assert report.power_states  # the pass took a scaling decision
+    # a silent window: no kinds observed, yet the fleet still spins down
+    report2 = router.plan(now=100.0)
+    assert report2.fleet is None  # early-out: nothing to sweep
+    assert report2.demand_tps == pytest.approx(0.0)
+    assert sorted(report2.power_states.values()).count("asleep") == 2

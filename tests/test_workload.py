@@ -1,0 +1,205 @@
+"""Property tests for the open-loop traffic generator (workload/generator).
+
+Through ``_hypothesis_compat``: real hypothesis strategies when installed,
+a deterministic boundary grid otherwise. The three contracts the tentpole
+rests on:
+
+* **determinism** — the same :class:`WorkloadSpec` (same seed) emits a
+  byte-identical trace (``trace_bytes`` / ``trace_digest``);
+* **rate fidelity** — the empirical arrival rate tracks ``rate_rps`` (times
+  the diurnal envelope's time average) within sampling tolerance;
+* **length safety** — every emitted request fits the engine by
+  construction: ``len(prompt) < max_len`` always, generation budget
+  reserved too, so a matching engine never rejects and never length-caps.
+"""
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.workload import (
+    TenantSpec, WorkloadSpec, diurnal_mult, empirical_rate_rps, generate,
+    mean_diurnal_mult, trace_bytes, trace_digest,
+)
+
+
+def spec(**kw) -> WorkloadSpec:
+    kw.setdefault("seed", 0)
+    kw.setdefault("duration_s", 1.0)
+    kw.setdefault("rate_rps", 200.0)
+    kw.setdefault("max_len", 32)
+    return WorkloadSpec(**kw)
+
+
+TWO_TENANTS = (
+    TenantSpec("chat", weight=3.0, prompt_median=6, prompt_max=14,
+               new_tokens_median=4, new_tokens_max=8, slo_s=0.05),
+    TenantSpec("batch", weight=1.0, prompt_median=10, prompt_max=20,
+               new_tokens_median=6, new_tokens_max=10),
+)
+
+
+# ---------------------------------------------------------------------------
+# Determinism
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       arrival=st.sampled_from(["poisson", "bursty"]))
+def test_same_seed_is_byte_identical(seed, arrival):
+    s = spec(seed=seed, arrival=arrival, rate_rps=150.0,
+             diurnal_period_s=1.0, diurnal_trough=0.3, diurnal_peak=1.8,
+             tenants=TWO_TENANTS)
+    a, b = generate(s), generate(s)
+    assert trace_bytes(a) == trace_bytes(b)
+    assert trace_digest(a) == trace_digest(b)
+    # and the equality is structural, not just on the serialization
+    assert [(t.at_s, t.tenant, t.request.prompt, t.request.max_new_tokens)
+            for t in a] == \
+           [(t.at_s, t.tenant, t.request.prompt, t.request.max_new_tokens)
+            for t in b]
+
+
+def test_different_seeds_differ():
+    assert trace_digest(generate(spec(seed=0))) != \
+        trace_digest(generate(spec(seed=1)))
+
+
+def test_timestamps_sorted_within_duration_and_rids_unique():
+    s = spec(seed=3, arrival="bursty", tenants=TWO_TENANTS)
+    trace = generate(s, rid_base=100)
+    ts = [t.at_s for t in trace]
+    assert ts == sorted(ts)
+    assert all(0.0 <= t < s.duration_s for t in ts)
+    rids = [t.rid for t in trace]
+    assert rids == list(range(100, 100 + len(trace)))
+
+
+# ---------------------------------------------------------------------------
+# Rate fidelity
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(rate=st.floats(400.0, 1600.0))
+def test_empirical_rate_tracks_lambda(rate):
+    """Flat Poisson: N/T estimates rate_rps. With lambda*T >= 400 the
+    Poisson sd is <= 5% of the mean, so +-25% is an ~5-sigma bound."""
+    s = spec(seed=11, rate_rps=rate)
+    emp = empirical_rate_rps(generate(s), s.duration_s)
+    assert emp == pytest.approx(rate, rel=0.25)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 40))
+def test_diurnal_rate_tracks_envelope_average(seed):
+    s = spec(seed=seed, rate_rps=800.0, diurnal_period_s=1.0,
+             diurnal_trough=0.2, diurnal_peak=1.8)
+    emp = empirical_rate_rps(generate(s), s.duration_s)
+    assert emp == pytest.approx(800.0 * mean_diurnal_mult(s), rel=0.25)
+
+
+def test_diurnal_envelope_shapes_arrivals():
+    """Peak sits at t=0 (and the period boundary), trough mid-cycle: the
+    first quarter must out-arrive the trough-centered half-width window."""
+    s = spec(seed=5, rate_rps=800.0, diurnal_period_s=1.0,
+             diurnal_trough=0.1, diurnal_peak=2.0)
+    trace = generate(s)
+    near_peak = sum(1 for t in trace if t.at_s < 0.25)
+    near_trough = sum(1 for t in trace if 0.375 <= t.at_s < 0.625)
+    assert near_peak > near_trough
+    assert diurnal_mult(s, 0.0) == pytest.approx(2.0)
+    assert diurnal_mult(s, 0.5) == pytest.approx(0.1)
+
+
+def test_bursty_layers_extra_arrivals_on_the_base_process():
+    base = spec(seed=9, rate_rps=400.0)
+    bursty = spec(seed=9, rate_rps=400.0, arrival="bursty",
+                  burst_rate_mult=6.0, burst_mean_s=0.05, quiet_mean_s=0.1)
+    n_base, n_burst = len(generate(base)), len(generate(bursty))
+    assert n_burst > n_base  # episodes only ever ADD rate
+
+
+# ---------------------------------------------------------------------------
+# Length safety
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(max_len=st.integers(4, 48), seed=st.integers(0, 20))
+def test_lengths_always_fit_the_engine(max_len, seed):
+    s = spec(seed=seed, max_len=max_len, rate_rps=300.0,
+             tenants=TWO_TENANTS)
+    for t in generate(s):
+        r = t.request
+        assert 1 <= len(r.prompt) < max_len  # admission guaranteed
+        assert 1 <= r.max_new_tokens < max_len
+        # reserve_output (default): the whole generation budget fits too,
+        # so a finish can never be a length_cap
+        assert len(r.prompt) + r.max_new_tokens <= max_len
+        assert all(1 <= tok <= 17 for tok in r.prompt)
+
+
+def test_tenant_caps_respected_without_reserve():
+    s = spec(seed=2, max_len=16, reserve_output=False, tenants=TWO_TENANTS)
+    for t in generate(s):
+        tenant = next(x for x in TWO_TENANTS if x.name == t.tenant)
+        assert len(t.request.prompt) <= tenant.prompt_max
+        assert t.request.max_new_tokens <= tenant.new_tokens_max
+        assert len(t.request.prompt) <= s.max_len - 1
+
+
+def test_tenant_mix_follows_weights_and_stamps_slos():
+    trace = generate(spec(seed=4, rate_rps=400.0, tenants=TWO_TENANTS))
+    counts = {"chat": 0, "batch": 0}
+    for t in trace:
+        counts[t.tenant] += 1
+        if t.tenant == "chat":
+            assert t.request.slo_s == 0.05
+        else:
+            assert t.request.slo_s is None
+    assert counts["chat"] > counts["batch"] > 0  # 3:1 weights
+
+
+def test_generated_requests_never_reject_on_a_matching_engine(small_engine):
+    """The end-to-end form of the cap guarantee: a real engine with the
+    spec's max_len admits every emitted request."""
+    engine = small_engine
+    trace = generate(spec(seed=6, duration_s=0.2, rate_rps=200.0,
+                          max_len=engine.max_len, tenants=TWO_TENANTS))
+    assert trace  # non-degenerate
+    for t in trace:
+        assert engine.submit(t.request)
+    assert engine.stats.rejected == 0 and engine.stats.truncated == 0
+
+
+@pytest.fixture(scope="module")
+def small_engine():
+    import jax
+
+    from repro import models as M
+    from repro.configs import get_config, reduced
+    from repro.runtime import ServingEngine
+
+    cfg = reduced(get_config("llama3.2-3b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return ServingEngine(cfg, params, slots=2, max_len=24)
+
+
+# ---------------------------------------------------------------------------
+# Spec validation
+# ---------------------------------------------------------------------------
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        spec(arrival="uniform")
+    with pytest.raises(ValueError):
+        spec(rate_rps=0.0)
+    with pytest.raises(ValueError):
+        spec(duration_s=0.0)
+    with pytest.raises(ValueError):
+        spec(max_len=1)
+    with pytest.raises(ValueError):
+        spec(tenants=())
+    with pytest.raises(ValueError):
+        spec(diurnal_period_s=1.0, diurnal_trough=2.0, diurnal_peak=1.0)
