@@ -1,0 +1,177 @@
+"""Static-analysis benchmark: pre-screen pruning + lint surface, pinned.
+
+Two claims, both CI-gated (tests/test_analysis.py asserts the same
+invariants on a smaller fleet):
+
+* **Pruning** — running ``search_fleet`` with the static pre-screen over
+  ``CANDIDATE_FLEET`` (the fleet_bench fleet + candidate placements a
+  fleet operator would realistically enumerate: too-small meshes, a
+  decommission-grade hot destination) avoids ≥30% of GA measurements
+  while every surviving cell's GA winner, operating point, and the fleet
+  frontier stay **bit-identical** to the unscreened sweep.
+* **Lint surface** — the kernel + decode-path lints run clean (finding
+  counts reported; CI's offload-lint job separately gates new findings
+  against ``tools/offload_lint_baseline.json``).
+
+``--json BENCH_analysis.json`` writes the unified artifact
+(benchmarks/artifact.py) with ``measurements_avoided`` and lint counts.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from benchmarks.artifact import artifact, write_artifact  # noqa: E402
+from benchmarks.fleet_bench import FLEET, GA, MESH  # noqa: E402
+from repro.core.evaluator import EvalEngine, VectorizedExecutor  # noqa: E402
+from repro.core.offload_search import CellSpec, search_fleet  # noqa: E402
+from repro.core.power import TpuPowerModel  # noqa: E402
+
+# A previous-generation destination: same mesh, strictly hotter silicon at
+# every component. Cells pinned here exist so the screen can prove them
+# pointless (equal step times, strictly worse energy for every genome).
+HOT_POWER = TpuPowerModel(p_idle=95.0, p_mxu=130.0, p_hbm=45.0, p_ici=14.0)
+
+# Candidate placements a fleet sweep would enumerate without a screen:
+# too-small meshes (nothing fits), an oversized arch on the standard mesh,
+# and the hot destination for each serving workload class.
+CANDIDATES = [
+    CellSpec.create("qwen1.5-110b", "train_4k", {"data": 2, "model": 2}),
+    CellSpec.create("mixtral-8x7b", "train_4k", {"data": 2, "model": 2}),
+    CellSpec.create("grok-1-314b", "train_4k", MESH),
+    CellSpec.create("llama3.2-3b", "decode_32k", MESH, power=HOT_POWER),
+    CellSpec.create("rwkv6-1.6b", "decode_32k", MESH, power=HOT_POWER),
+    CellSpec.create("llama3.2-3b", "prefill_32k", MESH, power=HOT_POWER),
+]
+
+CANDIDATE_FLEET = list(FLEET) + CANDIDATES
+
+
+def _frontier_sig(fleet):
+    return [(p.cell, p.genome, p.time_s, p.energy_ws) for p in fleet.frontier]
+
+
+def run(json_path=None) -> list[tuple]:
+    rows: list[tuple] = []
+    scenarios: dict = {}
+
+    # -- screened vs unscreened sweep ------------------------------------
+    t0 = time.perf_counter()
+    plain = search_fleet(CANDIDATE_FLEET, ga_config=GA,
+                         engine=EvalEngine(executor=VectorizedExecutor()))
+    t_plain = time.perf_counter() - t0
+
+    eng = EvalEngine(executor=VectorizedExecutor())
+    t0 = time.perf_counter()
+    screened = search_fleet(CANDIDATE_FLEET, ga_config=GA, engine=eng,
+                            screen=True)
+    t_screened = time.perf_counter() - t0
+
+    avoided = plain.evaluations - screened.evaluations
+    avoided_frac = avoided / max(plain.evaluations, 1)
+    plain_by, scr_by = plain.by_cell(), screened.by_cell()
+    winners_identical = all(
+        plain_by[c].search.ga.best.genome == scr_by[c].search.ga.best.genome
+        for c in scr_by)
+    ops_identical = all(
+        (plain_by[c].operating_point is None)
+        == (scr_by[c].operating_point is None)
+        and (plain_by[c].operating_point is None
+             or (plain_by[c].operating_point.genome
+                 == scr_by[c].operating_point.genome))
+        for c in scr_by)
+    frontier_identical = _frontier_sig(plain) == _frontier_sig(screened)
+
+    rows.append((
+        "analysis_screen_prune", t_screened * 1e6,
+        f"avoided={avoided}/{plain.evaluations} ({avoided_frac:.1%}) "
+        f"cells {len(CANDIDATE_FLEET)}->{len(screened.cells)} "
+        f"identical: winners={winners_identical} ops={ops_identical} "
+        f"frontier={frontier_identical}"))
+    for d in screened.screen.dropped:
+        rows.append((f"analysis_dropped_{d.key}", 0.0,
+                     f"{d.reason}: {d.detail}"))
+    scenarios["screen"] = {
+        "cells_in": len(CANDIDATE_FLEET),
+        "cells_kept": len(screened.cells),
+        "evaluations_unscreened": plain.evaluations,
+        "evaluations_screened": screened.evaluations,
+        "measurements_avoided": avoided,
+        "avoided_frac": avoided_frac,
+        "winners_identical": winners_identical,
+        "operating_points_identical": ops_identical,
+        "frontier_identical": frontier_identical,
+        "wall_s_unscreened": t_plain,
+        "wall_s_screened": t_screened,
+        "dropped": screened.screen.to_json()["dropped"],
+    }
+
+    # -- lint surface -----------------------------------------------------
+    from repro.analysis.kernel_lint import lint_kernel_families
+    from repro.analysis.offload_lint import lint_model_families
+
+    t0 = time.perf_counter()
+    kf, call_counts = lint_kernel_families()
+    mf, reports = lint_model_families()
+    t_lint = time.perf_counter() - t0
+    counts: dict[str, int] = {}
+    for f in kf + mf:
+        counts[f.severity] = counts.get(f.severity, 0) + 1
+    rows.append((
+        "analysis_lint", t_lint * 1e6,
+        f"kernel_findings={len(kf)} model_findings={len(mf)} "
+        f"severities={counts or 'clean'} "
+        f"pallas_calls={sum(call_counts.values())}"))
+    for fam, rep in sorted(reports.items()):
+        rows.append((
+            f"analysis_decode_{fam}", 0.0,
+            f"flops={rep.flops:.3g} hbm_bytes={rep.hbm_bytes:.3g} "
+            f"AI={rep.intensity:.2f} eqns={int(rep.eqn_count)} "
+            f"matmuls={int(rep.by_kind['matmul'].count)}"))
+    scenarios["lint"] = {
+        "kernel_findings": len(kf),
+        "model_findings": len(mf),
+        "severity_counts": counts,
+        "pallas_calls_captured": call_counts,
+        "decode_regions": {
+            fam: {"flops": rep.flops, "hbm_bytes": rep.hbm_bytes,
+                  "intensity": rep.intensity}
+            for fam, rep in reports.items()},
+    }
+
+    if json_path:
+        write_artifact(json_path, artifact(
+            "analysis_bench",
+            scenarios=scenarios,
+            metrics={
+                "measurements_avoided": avoided,
+                "avoided_frac": avoided_frac,
+                "winners_identical": winners_identical,
+                "operating_points_identical": ops_identical,
+                "frontier_identical": frontier_identical,
+                "lint_findings": len(kf) + len(mf),
+                "lint_errors": counts.get("error", 0),
+            },
+            cache=eng.cache.stats()))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="write the machine-readable record here "
+                         "(e.g. BENCH_analysis.json)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, us, derived in run(json_path=args.json):
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,8 @@ Sections:
                     trace integration; model calibration vs measurements)
   roofline_*      — §Roofline summary per dry-run cell (when records exist)
   kernel_*        — kernel micro-benchmarks / TPU projections
+  analysis_*      — static pre-screen pruning (screened vs unscreened
+                    fleet sweep, bit-identical survivors) + lint surface
   e2e_*           — end-to-end train/serve drivers (reduced configs)
 
 ``--json-dir DIR`` writes the unified BENCH_*.json artifact
@@ -28,7 +30,7 @@ path: the serving artifact when 'serving' is among the selected sections,
 else the traffic artifact (CI: ``BENCH_serving.json`` / ``BENCH_traffic.json``
 at the repo root, uploaded per commit). ``--only a,b`` restricts the run to
 named sections (himeno, ga, fleet, serving, traffic, router, power, kernel,
-e2e, roofline).
+analysis, e2e, roofline).
 See benchmarks/README.md for the flag and artifact-schema reference.
 """
 from __future__ import annotations
@@ -40,7 +42,7 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 SECTIONS = ("himeno", "ga", "fleet", "serving", "traffic", "router",
-            "power", "kernel", "e2e", "roofline")
+            "power", "kernel", "analysis", "e2e", "roofline")
 
 
 def main() -> None:
@@ -99,6 +101,9 @@ def main() -> None:
     if "kernel" in only:
         from benchmarks import kernel_bench
         rows += kernel_bench.run()
+    if "analysis" in only:
+        from benchmarks import analysis_bench
+        rows += analysis_bench.run(json_path=art("analysis"))
 
     if "e2e" in only:
         # end-to-end drivers (reduced configs, CPU)

@@ -1,0 +1,335 @@
+"""Static lint for Pallas kernel call sites (grid × BlockSpec geometry).
+
+A ``pallas_call`` encodes its whole data movement contract statically —
+grid, BlockSpecs, index maps, scratch shapes — so the classic kernel bugs
+(a block read past the operand edge, an output tile nobody writes, scratch
+silently landing outside VMEM, a VMEM working set over budget) are all
+checkable without running the kernel. :func:`capture_pallas_calls` swaps
+``pl.pallas_call`` for a recorder while the real kernel *entry function*
+runs on toy operands, so the lint sees exactly the specs the production
+code builds (including shape-dependent block clamping), then
+:func:`lint_captured` replays every index map over the grid.
+
+Rules (IDs ``<rule>:<site>``):
+
+* ``empty-grid`` (error) — a grid dimension ≤ 0: the kernel body never runs.
+* ``index-arity`` (error) — an ``index_map`` whose parameter count differs
+  from ``len(grid)``.
+* ``oob-block`` (error) — some grid point maps a block past the operand's
+  bounds (reads garbage / faults on hardware).
+* ``uncovered-output`` (error) — grid ∪ blocks leave output elements
+  unwritten.
+* ``unspecified-memory-space`` (warn) — scratch allocated without a
+  TPU memory-space annotation (defaults can land in the wrong space).
+* ``vmem-overflow`` (warn) — per-step block + scratch working set exceeds
+  the chip's VMEM budget.
+* ``ref-alias`` (info/error) — ``input_output_aliases`` noted; mismatched
+  aliased shapes/dtypes are an error.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import inspect
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as _pallas
+
+from repro.analysis.offload_lint import Finding, _sorted
+from repro.core.power import TPU_V5E
+
+# Replaying every index map over every grid point is exact but O(|grid|);
+# past this we fall back to corner sampling and skip coverage.
+_MAX_GRID_POINTS = 65536
+_MAX_COVER_ELEMS = 1 << 22
+
+
+@dataclasses.dataclass
+class CapturedCall:
+    """One recorded ``pallas_call`` invocation (specs + operand shapes)."""
+
+    kernel_name: str
+    grid: Tuple[int, ...]
+    in_specs: List[Any]
+    out_specs: List[Any]
+    out_shape: List[jax.ShapeDtypeStruct]
+    scratch_shapes: List[Any]
+    operand_shapes: List[Tuple[int, ...]]
+    operand_dtypes: List[Any]
+    aliases: Dict[int, int]
+    single_output: bool
+
+
+def _as_list(x: Any) -> List[Any]:
+    if x is None:
+        return []
+    if isinstance(x, (list, tuple)):
+        return list(x)
+    return [x]
+
+
+@contextlib.contextmanager
+def capture_pallas_calls():
+    """Swap ``pl.pallas_call`` for a recorder; yields the capture list.
+
+    The recorder returns zeros of ``out_shape``, so the surrounding entry
+    function's pre/post-processing still runs (that is what builds the
+    specs we want to see) while no kernel executes.
+    """
+    captured: List[CapturedCall] = []
+    real = _pallas.pallas_call
+
+    def recorder(kernel, **kw):
+        def fake(*operands):
+            grid = kw.get("grid", ())
+            if isinstance(grid, int):
+                grid = (grid,)
+            outs = _as_list(kw.get("out_shape"))
+            captured.append(CapturedCall(
+                kernel_name=getattr(getattr(kernel, "func", kernel),
+                                    "__name__", str(kernel)).lstrip("_"),
+                grid=tuple(int(g) for g in grid),
+                in_specs=_as_list(kw.get("in_specs")),
+                out_specs=_as_list(kw.get("out_specs")),
+                out_shape=outs,
+                scratch_shapes=_as_list(kw.get("scratch_shapes")),
+                operand_shapes=[tuple(jnp.shape(o)) for o in operands],
+                operand_dtypes=[jnp.result_type(o) for o in operands],
+                aliases=dict(kw.get("input_output_aliases") or {}),
+                single_output=not isinstance(kw.get("out_shape"),
+                                             (list, tuple)),
+            ))
+            zeros = [jnp.zeros(s.shape, s.dtype) for s in outs]
+            return zeros[0] if captured[-1].single_output else zeros
+        return fake
+
+    _pallas.pallas_call = recorder
+    try:
+        yield captured
+    finally:
+        _pallas.pallas_call = real
+
+
+# ---------------------------------------------------------------------------
+# Geometry checks
+# ---------------------------------------------------------------------------
+
+
+def _grid_points(grid: Tuple[int, ...], exhaustive: bool):
+    if exhaustive:
+        return itertools.product(*(range(g) for g in grid))
+    return itertools.product(*(sorted({0, g - 1}) for g in grid))
+
+
+def _block_start(spec: Any, point: Tuple[int, ...]) -> Optional[List[int]]:
+    """Element offsets of the block ``spec`` selects at one grid point."""
+    index_map = getattr(spec, "index_map", None)
+    block = getattr(spec, "block_shape", None)
+    if index_map is None or block is None:
+        return None
+    idx = index_map(*point)
+    if not isinstance(idx, tuple):
+        idx = (idx,)
+    return [int(i) * int(b) for i, b in zip(idx, block)]
+
+
+def _spec_findings(spec: Any, shape: Tuple[int, ...], grid: Tuple[int, ...],
+                   site: str, exhaustive: bool,
+                   cover: Optional[np.ndarray]) -> List[Finding]:
+    findings: List[Finding] = []
+    index_map = getattr(spec, "index_map", None)
+    block = getattr(spec, "block_shape", None)
+    if index_map is None or block is None:
+        return findings
+    try:
+        arity = len(inspect.signature(index_map).parameters)
+    except (TypeError, ValueError):
+        arity = len(grid)
+    if arity != len(grid):
+        findings.append(Finding(
+            "index-arity", "error", site,
+            "index_map takes %d args but grid has %d dims"
+            % (arity, len(grid))))
+        return findings
+    if len(block) != len(shape):
+        findings.append(Finding(
+            "oob-block", "error", site,
+            "block rank %d != operand rank %d" % (len(block), len(shape))))
+        return findings
+    oob_at = None
+    for point in _grid_points(grid, exhaustive):
+        start = _block_start(spec, point)
+        if start is None:
+            continue
+        for dim, (s, b, n) in enumerate(zip(start, block, shape)):
+            if s < 0 or s + int(b) > n:
+                oob_at = (point, dim, s)
+                break
+        if oob_at:
+            break
+        if cover is not None:
+            cover[tuple(slice(s, s + int(b)) for s, b in zip(start, block))] \
+                = True
+    if oob_at:
+        point, dim, s = oob_at
+        findings.append(Finding(
+            "oob-block", "error", site,
+            "grid point %s maps dim %d to offset %d, past operand shape %s"
+            % (point, dim, s, tuple(shape))))
+    return findings
+
+
+def _block_bytes(spec: Any, dtype: Any) -> float:
+    block = getattr(spec, "block_shape", None)
+    if block is None:
+        return 0.0
+    n = 1
+    for b in block:
+        n *= int(b)
+    return float(n * np.dtype(dtype).itemsize)
+
+
+def _scratch_bytes(scratch: Any) -> float:
+    shape = getattr(scratch, "shape", ())
+    dtype = getattr(scratch, "dtype", jnp.float32)
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return float(n * np.dtype(dtype).itemsize)
+
+
+def lint_captured(call: CapturedCall, *, site: str,
+                  vmem_budget: float = TPU_V5E.vmem_bytes) -> List[Finding]:
+    """Run every geometry rule over one captured ``pallas_call``."""
+    findings: List[Finding] = []
+    base = "%s/%s" % (site, call.kernel_name)
+
+    if not call.grid or any(g <= 0 for g in call.grid):
+        findings.append(Finding(
+            "empty-grid", "error", base,
+            "grid %s has a non-positive dimension" % (call.grid,)))
+        return _sorted(findings)
+
+    n_points = 1
+    for g in call.grid:
+        n_points *= g
+    exhaustive = n_points <= _MAX_GRID_POINTS
+
+    for i, (spec, shape) in enumerate(zip(call.in_specs, call.operand_shapes)):
+        findings += _spec_findings(spec, shape, call.grid,
+                                   "%s/in%d" % (base, i), exhaustive, None)
+
+    vmem = sum(_block_bytes(spec, dt)
+               for spec, dt in zip(call.in_specs, call.operand_dtypes))
+    for o, (spec, out) in enumerate(zip(call.out_specs, call.out_shape)):
+        size = 1
+        for d in out.shape:
+            size *= int(d)
+        cover = (np.zeros(out.shape, dtype=bool)
+                 if exhaustive and size <= _MAX_COVER_ELEMS else None)
+        findings += _spec_findings(spec, tuple(out.shape), call.grid,
+                                   "%s/out%d" % (base, o), exhaustive, cover)
+        if cover is not None and not cover.all():
+            findings.append(Finding(
+                "uncovered-output", "error", "%s/out%d" % (base, o),
+                "%d of %d output elements never written by any grid block"
+                % (int(size - cover.sum()), size)))
+        vmem += _block_bytes(spec, out.dtype)
+
+    for s, scratch in enumerate(call.scratch_shapes):
+        vmem += _scratch_bytes(scratch)
+        # pltpu.VMEM/SMEM allocations know their memory space; a bare
+        # ShapeDtypeStruct does not and lands wherever the compiler likes.
+        if isinstance(scratch, jax.ShapeDtypeStruct) or not (
+                hasattr(scratch, "memory_space")
+                or type(scratch).__name__ in ("MemoryRef", "AbstractMemoryRef")):
+            findings.append(Finding(
+                "unspecified-memory-space", "warn",
+                "%s/scratch%d" % (base, s),
+                "scratch buffer has no TPU memory-space annotation"))
+
+    if vmem > vmem_budget:
+        findings.append(Finding(
+            "vmem-overflow", "warn", base,
+            "per-step working set %.2f MiB exceeds VMEM budget %.2f MiB"
+            % (vmem / 2**20, vmem_budget / 2**20), value=vmem))
+
+    for in_idx, out_idx in call.aliases.items():
+        ok = (in_idx < len(call.operand_shapes)
+              and out_idx < len(call.out_shape)
+              and tuple(call.operand_shapes[in_idx])
+              == tuple(call.out_shape[out_idx].shape)
+              and call.operand_dtypes[in_idx]
+              == call.out_shape[out_idx].dtype)
+        findings.append(Finding(
+            "ref-alias", "info" if ok else "error",
+            "%s/alias%d->%d" % (base, in_idx, out_idx),
+            "input %d aliases output %d%s" % (
+                in_idx, out_idx, "" if ok else " with mismatched shape/dtype")))
+    return _sorted(findings)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-family entry points (what the CLI and CI lint)
+# ---------------------------------------------------------------------------
+
+
+def _run_flash():
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+    q = jnp.zeros((1, 2, 256, 32), jnp.bfloat16)
+    flash_attention_pallas(q, q, q, causal=True, window=128,
+                           block_q=128, block_k=128)
+
+
+def _run_wkv():
+    from repro.kernels.wkv.kernel import wkv_pallas
+    x = jnp.zeros((1, 2, 128, 16), jnp.bfloat16)
+    u = jnp.zeros((2, 16), jnp.float32)
+    wkv_pallas(x, x, x, x.astype(jnp.float32), u, chunk=64)
+
+
+def _run_rmsnorm():
+    from repro.kernels.rmsnorm.kernel import rms_norm_pallas
+    rms_norm_pallas(jnp.zeros((512, 64), jnp.bfloat16),
+                    jnp.zeros((64,), jnp.float32))
+
+
+def _run_himeno():
+    from repro.kernels.himeno.kernel import himeno_jacobi_pallas
+    p = jnp.zeros((9, 8, 8), jnp.float32)
+    coef = lambda n: jnp.zeros((n, 9, 8, 8), jnp.float32)  # noqa: E731
+    himeno_jacobi_pallas(p, coef(4), coef(3), coef(3), p, p)
+
+
+KERNEL_FAMILIES: Dict[str, Callable[[], None]] = {
+    "flash_attention": _run_flash,
+    "wkv": _run_wkv,
+    "rmsnorm": _run_rmsnorm,
+    "himeno": _run_himeno,
+}
+
+
+def lint_kernel_families(families: Sequence[str] = tuple(KERNEL_FAMILIES),
+                         ) -> Tuple[List[Finding], Dict[str, int]]:
+    """Capture + lint every kernel family's real call sites on toy shapes.
+
+    Returns (findings, calls-per-family) — a family recording zero calls
+    is itself a finding (the capture hook missed the kernel entirely).
+    """
+    findings: List[Finding] = []
+    call_counts: Dict[str, int] = {}
+    for family in families:
+        with capture_pallas_calls() as captured:
+            KERNEL_FAMILIES[family]()
+        call_counts[family] = len(captured)
+        if not captured:
+            findings.append(Finding(
+                "no-pallas-call", "error", "kernels/%s" % family,
+                "entry function issued no pallas_call under capture"))
+        for call in captured:
+            findings += lint_captured(call, site="kernels/%s" % family)
+    return _sorted(findings), call_counts

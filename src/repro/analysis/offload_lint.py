@@ -1,0 +1,274 @@
+"""Serving-hot-path lint over traced decode programs.
+
+Rules (stable IDs are ``<rule>:<site>``; the CLI baseline stores IDs):
+
+* ``host-sync`` (error) — a ``pure_callback`` / ``io_callback`` / debug
+  print inside the decode step. Each one forces a device→host round trip
+  per decoded token, serializing the hot loop.
+* ``undonated-state`` (error) — a large buffer that round-trips through a
+  jitted step (identical input and output tensor type) without an XLA
+  donation alias. The decode KV/recurrent state doubles its HBM footprint
+  and pays a copy per token when not donated.
+* ``f32-promote`` (warn) — a ``convert_element_type`` to float32 on the
+  decode path whose result is state-sized (≥ half the largest decode-state
+  leaf). Small f32 islands (softmax accumulators) are deliberate and stay
+  under the threshold.
+* ``retrace-hazard`` (warn) — tracing the step at two batch sizes yields
+  different primitive multisets, i.e. Python-level control flow depends on
+  shapes and every new shape recompiles *a different program*.
+* ``dynamic-loop`` (info) — a ``while`` with no static trip count inside
+  the step; fine for argmax-style search, but it hides cost from the
+  static screen, so it is surfaced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import jaxpr_walk
+
+SEVERITIES = ("error", "warn", "info")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint finding. ``fid`` is stable across runs for baselining."""
+
+    rule: str
+    severity: str
+    site: str
+    message: str
+    value: Optional[float] = None
+
+    @property
+    def fid(self) -> str:
+        return "%s:%s" % (self.rule, self.site)
+
+    def to_json(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["fid"] = self.fid
+        return d
+
+
+def _sorted(findings: List[Finding]) -> List[Finding]:
+    order = {s: i for i, s in enumerate(SEVERITIES)}
+    return sorted(findings, key=lambda f: (order.get(f.severity, 9), f.fid))
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr-level hazards
+# ---------------------------------------------------------------------------
+
+
+def lint_jaxpr_hazards(report: jaxpr_walk.RegionReport, *, site: str,
+                       state_leaf_bytes: float = 0.0) -> List[Finding]:
+    """Lint a walked region for host syncs, f32 promotions, dynamic loops.
+
+    ``state_leaf_bytes`` scales the f32-promotion threshold: conversions
+    producing ≥ half the largest decode-state leaf are flagged, so the
+    rule tracks the model size instead of a fixed byte count.
+    """
+    findings: List[Finding] = []
+    for cb in report.callbacks:
+        findings.append(Finding(
+            "host-sync", "error", "%s/%s" % (site, cb),
+            "host callback on the decode path forces a device sync per step"))
+    for loop in report.dynamic_loops:
+        findings.append(Finding(
+            "dynamic-loop", "info", "%s/%s" % (site, loop),
+            "while-loop trip count is not static; cost invisible to screen"))
+    threshold = 0.5 * state_leaf_bytes
+    if threshold > 0:
+        for path, src, dst, out_bytes in report.conversions:
+            if dst == "float32" and src in ("bfloat16", "float16") \
+                    and out_bytes >= threshold:
+                findings.append(Finding(
+                    "f32-promote", "warn", "%s/%s" % (site, path),
+                    "state-sized %s->float32 promotion (%d bytes) on the "
+                    "decode path" % (src, out_bytes), value=float(out_bytes)))
+    return _sorted(findings)
+
+
+# ---------------------------------------------------------------------------
+# Donation lint (lowered-HLO aliasing check)
+# ---------------------------------------------------------------------------
+
+_ARG_RE = re.compile(r"%arg(\d+): tensor<([^>]+)>\s*(?:{([^}]*)})?")
+
+_MLIR_DTYPES = {
+    "bfloat16": "bf16", "float16": "f16", "float32": "f32", "float64": "f64",
+    "int8": "i8", "int16": "i16", "int32": "i32", "int64": "i64",
+    "uint8": "ui8", "uint16": "ui16", "uint32": "ui32", "uint64": "ui64",
+    "bool": "i1",
+}
+
+
+def _mlir_type(leaf: Any) -> str:
+    """MLIR tensor signature ("2x64x4x16xbf16") of a ShapeDtypeStruct."""
+    dtype = _MLIR_DTYPES.get(str(np.dtype(leaf.dtype)), "f32")
+    dims = [str(int(d)) for d in leaf.shape]
+    return "x".join(dims + [dtype])
+
+
+def _tensor_bytes(sig: str) -> int:
+    """Bytes of an MLIR tensor signature like ``8x64x4x16xbf16``."""
+    parts = sig.split("x")
+    dtype = parts[-1]
+    dims = [int(p) for p in parts[:-1] if p.isdigit()]
+    bytes_per = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "i8": 1, "ui8": 1,
+                 "i16": 2, "i32": 4, "i64": 8, "i1": 1}.get(dtype, 4)
+    n = 1
+    for d in dims:
+        n *= d
+    return n * bytes_per
+
+
+def lint_donation(jitted: Any, args: Sequence[Any], *, site: str,
+                  min_bytes: int = 1 << 16) -> List[Finding]:
+    """Flag large round-tripping buffers lowered without a donation alias.
+
+    Lowers the jitted callable on ``args`` (ShapeDtypeStructs are fine) and
+    inspects the StableHLO ``main`` signature: an input ≥ ``min_bytes``
+    whose tensor type also appears among the results (via ``eval_shape`` —
+    a round-tripping buffer) but carries no ``tf.aliasing_output``
+    attribute is an un-donated state buffer.
+    """
+    text = jitted.lower(*args).as_text()
+    m = re.search(r"@main\((.*?)\)\s*->", text, re.DOTALL)
+    if m is None:  # lowering layout changed; stay silent rather than lie
+        return []
+    args_text = m.group(1)
+    out_struct = jax.eval_shape(jitted, *args)
+    result_types = Counter(
+        _mlir_type(leaf) for leaf in jax.tree_util.tree_leaves(out_struct))
+    findings: List[Finding] = []
+    for idx, sig, attrs in _ARG_RE.findall(args_text):
+        if attrs and "aliasing_output" in attrs:
+            continue
+        nbytes = _tensor_bytes(sig)
+        if nbytes >= min_bytes and result_types.get(sig, 0) > 0:
+            findings.append(Finding(
+                "undonated-state", "error", "%s/arg%s<%s>" % (site, idx, sig),
+                "buffer round-trips through the step (%d bytes) without "
+                "donation; costs a copy + double residency per token"
+                % nbytes, value=float(nbytes)))
+    return _sorted(findings)
+
+
+# ---------------------------------------------------------------------------
+# Retrace hazard (shape-dependent program structure)
+# ---------------------------------------------------------------------------
+
+
+def retrace_signature(fn: Callable[..., Any], args: Sequence[Any]) -> Counter:
+    """Primitive-name multiset of the traced program (recursive)."""
+    rep = jaxpr_walk.trace_and_walk(fn, *args)
+    return Counter(rep.primitive_counts)
+
+
+def lint_retrace(fn: Callable[..., Any],
+                 args_small: Sequence[Any], args_large: Sequence[Any], *,
+                 site: str) -> List[Finding]:
+    """Trace at two batch sizes; differing primitive multisets mean the
+    Python built a *different program* per shape (retrace hazard)."""
+    sig_a = retrace_signature(fn, args_small)
+    sig_b = retrace_signature(fn, args_large)
+    if sig_a == sig_b:
+        return []
+    delta = {k: sig_b[k] - sig_a[k]
+             for k in set(sig_a) | set(sig_b) if sig_a[k] != sig_b[k]}
+    return [Finding(
+        "retrace-hazard", "warn", site,
+        "program structure depends on batch size (primitive deltas: %s)"
+        % (dict(sorted(delta.items())),))]
+
+
+# ---------------------------------------------------------------------------
+# Model-family entry points (what the CLI and CI lint)
+# ---------------------------------------------------------------------------
+
+#: family -> reduced arch used to lint that decode path.
+DECODE_FAMILIES: Dict[str, str] = {
+    "dense": "llama3.2-3b",
+    "ssm": "rwkv6-1.6b",
+    "hybrid": "zamba2-7b",
+}
+
+
+def _decode_shapes(cfg: Any, batch: int, cache_len: int):
+    from repro.models import transformer as T
+    params = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    state = jax.eval_shape(
+        lambda: T.init_decode_state(cfg, batch, cache_len))
+    tokens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    return params, state, tokens
+
+
+def _max_leaf_bytes(tree: Any) -> float:
+    leaves = jax.tree_util.tree_leaves(tree)
+    best = 0.0
+    for leaf in leaves:
+        n = 1
+        for d in leaf.shape:
+            n *= int(d)
+        best = max(best, float(n * np.dtype(leaf.dtype).itemsize))
+    return best
+
+
+def lint_decode_family(family: str, *, batch: int = 2,
+                       cache_len: int = 64) -> Tuple[List[Finding],
+                                                     jaxpr_walk.RegionReport]:
+    """Lint one decode family's hot path end to end.
+
+    Walks the traced ``decode_step`` for hazards, lowers the *actual*
+    ``ServingEngine._step`` jit to check state donation, and compares
+    traces at two batch sizes for retrace hazards. Returns (findings,
+    region report) so callers can also inspect the static costs.
+    """
+    from repro.configs import get_config
+    from repro.configs.base import reduced
+    from repro.models import transformer as T
+    from repro.runtime.serving import ServingEngine
+
+    arch = DECODE_FAMILIES[family]
+    cfg = reduced(get_config(arch))
+    site = "decode/%s" % family
+    params, state, tokens = _decode_shapes(cfg, batch, cache_len)
+
+    step = lambda p, s, t: T.decode_step(cfg, p, s, t)  # noqa: E731
+    report = jaxpr_walk.trace_and_walk(step, params, state, tokens)
+    findings = lint_jaxpr_hazards(
+        report, site=site, state_leaf_bytes=_max_leaf_bytes(state))
+
+    engine = ServingEngine(cfg, None, slots=batch, max_len=cache_len)
+    # Threshold scales with the model: anything a quarter of the largest
+    # decode-state leaf is state-sized, whatever the config size.
+    min_bytes = max(4096, int(0.25 * _max_leaf_bytes(state)))
+    findings += lint_donation(engine._step, (params, state, tokens),
+                              site=site + "/serving_step",
+                              min_bytes=min_bytes)
+
+    params2, state2, tokens2 = _decode_shapes(cfg, batch + 1, cache_len)
+    findings += lint_retrace(step, (params, state, tokens),
+                             (params2, state2, tokens2), site=site)
+    return _sorted(findings), report
+
+
+def lint_model_families(families: Sequence[str] = ("dense", "ssm", "hybrid"),
+                        ) -> Tuple[List[Finding],
+                                   Dict[str, jaxpr_walk.RegionReport]]:
+    """Lint every decode family; returns merged findings + per-family reports."""
+    findings: List[Finding] = []
+    reports: Dict[str, jaxpr_walk.RegionReport] = {}
+    for family in families:
+        f, rep = lint_decode_family(family)
+        findings += f
+        reports[family] = rep
+    return _sorted(findings), reports

@@ -253,6 +253,14 @@ class EvalEngine:
 
     executor: BatchExecutor = field(default_factory=SerialExecutor)
     cache: EvalCache = field(default_factory=EvalCache)
+    # Cells a static pre-screen (analysis/screen.py) dropped before they
+    # reached this engine: observability for "measurements avoided", kept
+    # out of CacheStats so cache accounting stays purely about lookups.
+    screened_cells: list = field(default_factory=list)
+
+    def note_screened(self, cell_keys: Sequence[str]) -> None:
+        """Record cells a pre-screen dropped before any evaluate() call."""
+        self.screened_cells.extend(cell_keys)
 
     def evaluate(
         self,

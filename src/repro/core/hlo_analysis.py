@@ -18,12 +18,13 @@ loop's known trip count when derivable from the HLO, else reported once
 from __future__ import annotations
 
 import re
+import warnings
 from dataclasses import dataclass, field
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
     "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
-    "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
 }
 
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
@@ -33,9 +34,40 @@ _OP_RE = re.compile(
     r"=\s*(?:\(([^)]*)\)|(\S+))\s+"
     r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
     r"(?:-start)?\(")
-_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|pred|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+# Any dtype-grammar token (f*/bf*/s*/u*/c*/pred) followed by a dims list —
+# unknown dtypes resolve through _dtype_bytes (bit-width fallback + warning)
+# instead of silently dropping or KeyError'ing on new HLO dtypes.
+_SHAPE_RE = re.compile(r"\b((?:bf|f|s|u|c)\d\w*|pred)\[([0-9,]*)\]")
 _GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
 _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+# while-loop structure: `... while(...), condition=%cond, body=%body` plus
+# computation headers `%name (params) -> result {` / `ENTRY %main ... {`
+_WHILE_RE = re.compile(
+    r"\bwhile\(.*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)"
+    r"|\bwhile\(.*?body=%?([\w.\-]+).*?condition=%?([\w.\-]+)")
+_COMP_HEADER_RE = re.compile(
+    r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_CONST_INT_RE = re.compile(r"\bconstant\((\d+)\)")
+_COMPARE_LT_RE = re.compile(r"\bcompare\(.*direction=LT")
+
+_warned_dtypes: set[str] = set()
+
+
+def _dtype_bytes(dt: str) -> float:
+    """Bytes per element; unknown dtypes fall back to their bit-width
+    (digits in the name) with a one-time warning instead of a KeyError."""
+    size = _DTYPE_BYTES.get(dt)
+    if size is not None:
+        return size
+    m = re.match(r"[a-z]+(\d+)", dt)
+    fallback = int(m.group(1)) / 8.0 if m else 4.0
+    if dt not in _warned_dtypes:
+        _warned_dtypes.add(dt)
+        warnings.warn(
+            "hlo_analysis: unknown dtype %r — assuming %g bytes/element"
+            % (dt, fallback), stacklevel=3)
+    return fallback
 
 
 @dataclass
@@ -44,10 +76,10 @@ class CollectiveStats:
     by_kind: dict = field(default_factory=dict)
     count: int = 0
 
-    def add(self, kind: str, bytes_: float):
+    def add(self, kind: str, bytes_: float, count: int = 1):
         self.wire_bytes += bytes_
         self.by_kind[kind] = self.by_kind.get(kind, 0.0) + bytes_
-        self.count += 1
+        self.count += count
 
 
 def _shape_bytes(text: str) -> float:
@@ -57,8 +89,66 @@ def _shape_bytes(text: str) -> float:
         for d in dims.split(","):
             if d:
                 n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
+        total += n * _dtype_bytes(dt)
     return total
+
+
+def _line_computations(lines: list[str]) -> list:
+    """Per-line computation name (None for lines outside any computation)."""
+    comp_of: list = []
+    current = None
+    for line in lines:
+        if current is None:
+            m = _COMP_HEADER_RE.match(line)
+            current = m.group(1) if m else None
+            comp_of.append(current)
+        else:
+            comp_of.append(current)
+            if line.strip().startswith("}"):
+                current = None
+    return comp_of
+
+
+def _computation_multipliers(lines: list[str], comp_of: list) -> dict:
+    """Trip-count multiplier per computation name.
+
+    A while op maps its body computation to the loop's trip count when the
+    condition computation has the canonical counted-loop form (a single
+    integer ``constant(K)`` plus a ``compare ... direction=LT``); otherwise
+    the body counts once. Nested whiles multiply through their parents.
+    """
+    comp_lines: dict = {}
+    for line, comp in zip(lines, comp_of):
+        if comp is not None:
+            comp_lines.setdefault(comp, []).append(line)
+    parents: dict = {}  # body comp -> (enclosing comp, cond comp)
+    for line, comp in zip(lines, comp_of):
+        m = _WHILE_RE.search(line)
+        if m:
+            cond = m.group(1) or m.group(4)
+            body = m.group(2) or m.group(3)
+            parents.setdefault(body, (comp, cond))
+
+    def trips_of(cond) -> int:
+        text = "\n".join(comp_lines.get(cond, ()))
+        if not _COMPARE_LT_RE.search(text):
+            return 1
+        consts = set(_CONST_INT_RE.findall(text))
+        return int(consts.pop()) if len(consts) == 1 else 1
+
+    mults: dict = {}
+
+    def mult_of(comp, seen=()):
+        if comp not in parents or comp in seen:
+            return 1
+        if comp not in mults:
+            parent, cond = parents[comp]
+            mults[comp] = trips_of(cond) * mult_of(parent, seen + (comp,))
+        return mults[comp]
+
+    for body in parents:
+        mult_of(body)
+    return mults
 
 
 def _group_size(line: str, default: int) -> int:
@@ -73,10 +163,14 @@ def _group_size(line: str, default: int) -> int:
 
 def collective_stats(hlo_text: str, default_group: int = 1) -> CollectiveStats:
     stats = CollectiveStats()
-    for line in hlo_text.splitlines():
+    lines = hlo_text.splitlines()
+    comp_of = _line_computations(lines)
+    mults = _computation_multipliers(lines, comp_of)
+    for line, comp in zip(lines, comp_of):
         m = _OP_RE.search(line)
         if not m:
             continue
+        trip_mult = mults.get(comp, 1)
         kind = m.group(3)
         shape_text = m.group(1) or m.group(2) or ""
         size = _shape_bytes(shape_text)
@@ -95,7 +189,7 @@ def collective_stats(hlo_text: str, default_group: int = 1) -> CollectiveStats:
             wire = size * (n - 1) / n
         else:  # collective-permute
             wire = size
-        stats.add(kind, wire)
+        stats.add(kind, wire * trip_mult, count=trip_mult)
     return stats
 
 

@@ -260,12 +260,15 @@ class FleetCellResult:
 
 @dataclass
 class FleetResult:
-    cells: list[FleetCellResult]  # input order
+    cells: list[FleetCellResult]  # input order (screened-out cells absent)
     frontier: list[ParetoPoint]  # fleet-wide non-dominated placements
     cache: CacheStats  # this sweep's shared-cache traffic (delta)
     evaluations: int  # distinct measurements actually performed
     cache_hits: int
     wall_s: float
+    # Static pre-screen outcome (analysis/screen.py ScreenReport) when
+    # search_fleet ran with screen=...; None means every cell was measured.
+    screen: Optional[object] = None
 
     @property
     def cache_hit_rate(self) -> float:
@@ -289,6 +292,7 @@ def search_fleet(
     cell_workers: int = 4,
     requirement: Optional[UserRequirement] = None,
     power: TpuPowerModel = TpuPowerModel(),
+    screen=None,
 ) -> FleetResult:
     """Sweep many (arch × shape × mesh) cells concurrently.
 
@@ -301,10 +305,26 @@ def search_fleet(
     intra-generation batching; ``requirement`` narrows each cell's frontier
     to a preferred operating point (lowest energy satisfying the
     requirement, the paper's §3.3 flow).
+
+    ``screen`` — pass ``True`` or an ``analysis.screen.ScreenPolicy`` to
+    run the static pre-screen first: cells it proves dead (infeasible /
+    dominated / below the intensity floor) are dropped before measurement
+    and recorded on ``FleetResult.screen`` + ``engine.screened_cells``.
+    Survivors' GA winners, operating points, and the fleet frontier are
+    bit-identical to the unscreened sweep (the screen's dominance proof
+    quantifies over the dropped cells' whole genome spaces).
     """
     from repro.configs import get_config
 
     eng = engine or EvalEngine(executor=VectorizedExecutor())
+
+    screen_report = None
+    if screen:
+        from repro.analysis.screen import ScreenPolicy, screen_cells
+        policy = screen if isinstance(screen, ScreenPolicy) else None
+        screen_report = screen_cells(cells, policy=policy, power=power)
+        cells = screen_report.kept
+        eng.note_screened([d.key for d in screen_report.dropped])
     stats_before = eng.cache.stats()
     t_start = time.perf_counter()
 
@@ -350,4 +370,5 @@ def search_fleet(
         cache=delta,
         evaluations=delta.inserts,
         cache_hits=delta.hits,
-        wall_s=time.perf_counter() - t_start)
+        wall_s=time.perf_counter() - t_start,
+        screen=screen_report)

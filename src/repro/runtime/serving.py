@@ -226,9 +226,14 @@ class ServingEngine:
         self._awake_at = 0.0  # when a "waking" engine finishes waking
         self._stream: Optional[dict] = None  # open stream session state
         self.last_step_s = 0.0  # modeled duration of the last stream step
+        # Donating the state matches launch/steps.build_serve_step: the old
+        # KV/recurrent buffers are dead after every call site (both the
+        # stream and wave paths rebind), so XLA updates the cache in place
+        # instead of paying a copy + double HBM residency per token.
         self._step = jax.jit(
             lambda params, state, tokens: T.decode_step(cfg, params, state,
-                                                        tokens))
+                                                        tokens),
+            donate_argnums=(1,))
 
     def submit(self, req: Request) -> bool:
         """Admit a request; False when rejected (empty prompt, a prompt the

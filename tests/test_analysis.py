@@ -1,0 +1,395 @@
+"""Static-analysis subsystem: jaxpr walker, lints, and the pre-screen.
+
+Covers the tentpole guarantees end to end:
+
+* the walker's FLOP/byte/trip-count math on known programs (exact
+  dot_general counts, scan multiplication, cond max-branch, while flags);
+* every lint rule both firing (synthetic positives) and staying quiet on
+  the repo's real kernels/decode paths (the CI gate's "clean" state);
+* the serving donation regression pin (the true finding this lint caught);
+* the screen's exact-safety contract: screened fleet sweeps are
+  bit-identical to unscreened for every survivor, and the dropped cells
+  provably contribute nothing;
+* the analyzer ↔ arithmetic_intensity consistency property (satellite).
+"""
+import json
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.analysis import jaxpr_walk
+from repro.analysis.jaxpr_walk import trace_and_walk, walk_closed
+from repro.analysis.kernel_lint import (
+    capture_pallas_calls, lint_captured, lint_kernel_families,
+)
+from repro.analysis.offload_lint import (
+    lint_decode_family, lint_donation, lint_jaxpr_hazards, lint_retrace,
+)
+from repro.analysis.screen import ScreenPolicy, screen_cells
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec, reduced
+from repro.core.arithmetic_intensity import lm_unit_costs
+from repro.core.evaluator import EvalEngine, VectorizedExecutor
+from repro.core.ga import GAConfig
+from repro.core.offload_search import CellSpec, search_fleet
+from repro.core.power import TpuPowerModel
+from repro.models import transformer as T
+
+MESH = {"data": 16, "model": 16}
+HOT = TpuPowerModel(p_idle=95.0, p_mxu=130.0, p_hbm=45.0, p_ici=14.0)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr_walk
+# ---------------------------------------------------------------------------
+
+
+def test_dot_general_flops_exact():
+    a = jnp.zeros((8, 32), jnp.float32)
+    b = jnp.zeros((32, 16), jnp.float32)
+    rep = trace_and_walk(lambda x, y: x @ y, a, b)
+    assert rep.by_kind["matmul"].flops == 2 * 8 * 16 * 32
+    # bytes: unfused in+out charge for the single eqn
+    assert rep.by_kind["matmul"].bytes == (8 * 32 + 32 * 16 + 8 * 16) * 4
+
+
+def test_scan_trip_count_multiplies():
+    w = jnp.zeros((16, 16), jnp.float32)
+
+    def body(carry, _):
+        return carry @ w, ()
+
+    def fn(x):
+        out, _ = jax.lax.scan(body, x, None, length=5)
+        return out
+
+    rep = trace_and_walk(fn, jnp.zeros((4, 16), jnp.float32))
+    assert rep.flops == 5 * (2 * 4 * 16 * 16)
+    (region,) = [r for p, r in rep.regions.items() if "scan" in p]
+    assert region.trip_count == 5
+    assert region.flops == 2 * 4 * 16 * 16  # per-trip body cost
+
+
+def test_cond_charges_worst_branch():
+    x = jnp.zeros((8, 8), jnp.float32)
+
+    def fn(pred, x):
+        return jax.lax.cond(pred, lambda v: v @ v @ v, lambda v: v, x)
+
+    rep = trace_and_walk(fn, jnp.array(True), x)
+    assert rep.by_kind["matmul"].flops == 2 * (2 * 8 * 8 * 8)  # two matmuls
+
+
+def test_while_flagged_dynamic():
+    def fn(x):
+        return jax.lax.while_loop(lambda v: v[0] < 10.0, lambda v: v + 1.0, x)
+
+    rep = trace_and_walk(fn, jnp.zeros((4,), jnp.float32))
+    assert rep.dynamic_loops
+    findings = lint_jaxpr_hazards(rep, site="t")
+    assert any(f.rule == "dynamic-loop" for f in findings)
+
+
+def test_callback_classified_and_linted():
+    def fn(x):
+        y = jax.pure_callback(lambda v: np.asarray(v),
+                              jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+        return y + 1
+
+    rep = trace_and_walk(fn, jnp.zeros((4,), jnp.float32))
+    assert rep.callbacks
+    findings = lint_jaxpr_hazards(rep, site="t")
+    assert any(f.rule == "host-sync" and f.severity == "error"
+               for f in findings)
+
+
+def test_classification_buckets():
+    assert jaxpr_walk.classify_primitive("dot_general") == "matmul"
+    assert jaxpr_walk.classify_primitive("scatter-add") == "scatter"
+    assert jaxpr_walk.classify_primitive("psum") == "collective"
+    assert jaxpr_walk.classify_primitive("pure_callback") == "callback"
+    assert jaxpr_walk.classify_primitive("pallas_call") == "kernel"
+    assert jaxpr_walk.classify_primitive("exp") == "elementwise"
+
+
+# ---------------------------------------------------------------------------
+# offload_lint rules
+# ---------------------------------------------------------------------------
+
+
+def test_donation_lint_fires_without_and_clears_with_donation():
+    state = jax.ShapeDtypeStruct((64, 64), jnp.float32)  # 16 KiB round-trip
+
+    def step(s, t):
+        return s + t, jnp.sum(s)
+
+    bad = jax.jit(step)
+    good = jax.jit(step, donate_argnums=(0,))
+    tok = jax.ShapeDtypeStruct((), jnp.float32)
+    assert [f.rule for f in
+            lint_donation(bad, (state, tok), site="t", min_bytes=4096)] \
+        == ["undonated-state"]
+    assert lint_donation(good, (state, tok), site="t", min_bytes=4096) == []
+
+
+def test_f32_promotion_rule_thresholds():
+    def fn(x):
+        big = x.astype(jnp.float32)  # state-sized promotion
+        small = x[0].astype(jnp.float32)  # softmax-island-sized: tolerated
+        return big.sum() + small.sum()
+
+    rep = trace_and_walk(fn, jnp.zeros((64, 64), jnp.bfloat16))
+    findings = lint_jaxpr_hazards(rep, site="t",
+                                  state_leaf_bytes=64 * 64 * 2)
+    promos = [f for f in findings if f.rule == "f32-promote"]
+    assert len(promos) == 1 and promos[0].value == 64 * 64 * 4
+
+
+def test_retrace_lint_flags_shape_dependent_structure():
+    def shape_dependent(x):
+        out = x
+        for _ in range(x.shape[0]):  # python loop over the batch dim
+            out = out + 1.0
+        return out
+
+    small = (jnp.zeros((2, 4), jnp.float32),)
+    large = (jnp.zeros((3, 4), jnp.float32),)
+    assert lint_retrace(shape_dependent, small, large, site="t")
+    assert lint_retrace(lambda x: x + 1.0, small, large, site="t") == []
+
+
+@pytest.mark.parametrize("family", ["dense", "ssm", "hybrid"])
+def test_decode_families_lint_clean(family):
+    """The repo's own decode hot paths carry no hazards (CI gate state).
+
+    This pins the serving donation fix: ``ServingEngine._step`` donates the
+    decode state, so the undonated-state rule (which fired on every family
+    before the fix) stays quiet.
+    """
+    findings, report = lint_decode_family(family)
+    assert findings == []
+    assert report.flops > 0 and report.hbm_bytes > 0
+    assert report.by_kind["matmul"].count > 0
+
+
+def test_serving_step_state_donated_in_lowered_hlo():
+    """Regression pin at the HLO level: the decode-state KV buffers carry
+    donation aliases in the lowered serving step."""
+    from repro.analysis.offload_lint import _decode_shapes
+    from repro.runtime.serving import ServingEngine
+
+    cfg = reduced(get_config("llama3.2-3b"))
+    params, state, tokens = _decode_shapes(cfg, 2, 64)
+    eng = ServingEngine(cfg, None, slots=2, max_len=64)
+    text = eng._step.lower(params, state, tokens).as_text()
+    assert "tf.aliasing_output" in text
+
+
+# ---------------------------------------------------------------------------
+# kernel_lint
+# ---------------------------------------------------------------------------
+
+
+def test_repo_kernels_lint_clean():
+    findings, counts = lint_kernel_families()
+    assert findings == []
+    assert counts == {"flash_attention": 1, "wkv": 1, "rmsnorm": 1,
+                      "himeno": 1}
+
+
+def _bad_pallas_call(index_map, out_index_map, grid=(4,),
+                     scratch=None):
+    """Build + capture a synthetic pallas_call with the given geometry."""
+    from jax.experimental import pallas as pl
+
+    x = jnp.zeros((16, 8), jnp.float32)
+    with capture_pallas_calls() as captured:
+        pl.pallas_call(
+            lambda x_ref, o_ref: None,
+            grid=grid,
+            in_specs=[pl.BlockSpec((4, 8), index_map)],
+            out_specs=pl.BlockSpec((4, 8), out_index_map),
+            out_shape=jax.ShapeDtypeStruct((16, 8), jnp.float32),
+            scratch_shapes=scratch or [],
+        )(x)
+    (call,) = captured
+    return lint_captured(call, site="t")
+
+
+def test_kernel_lint_oob_block():
+    findings = _bad_pallas_call(lambda i: (i + 1, 0), lambda i: (i, 0))
+    assert any(f.rule == "oob-block" and "in0" in f.site for f in findings)
+
+
+def test_kernel_lint_uncovered_output():
+    # output blocks all map to row-block 0: rows 4.. never written
+    findings = _bad_pallas_call(lambda i: (i, 0), lambda i: (0, 0))
+    assert any(f.rule == "uncovered-output" for f in findings)
+
+
+def test_kernel_lint_index_arity():
+    findings = _bad_pallas_call(lambda i, j: (i, 0), lambda i: (i, 0))
+    assert any(f.rule == "index-arity" for f in findings)
+
+
+def test_kernel_lint_unannotated_scratch():
+    findings = _bad_pallas_call(
+        lambda i: (i, 0), lambda i: (i, 0),
+        scratch=[jax.ShapeDtypeStruct((8, 8), jnp.float32)])
+    assert any(f.rule == "unspecified-memory-space" for f in findings)
+
+
+def test_kernel_lint_empty_grid():
+    findings = _bad_pallas_call(lambda i: (i, 0), lambda i: (i, 0), grid=(0,))
+    assert [f.rule for f in findings] == ["empty-grid"]
+
+
+# ---------------------------------------------------------------------------
+# screen
+# ---------------------------------------------------------------------------
+
+_SMALL_FLEET = [
+    CellSpec.create("llama3.2-3b", "decode_32k", MESH),
+    CellSpec.create("rwkv6-1.6b", "decode_32k", MESH),
+    CellSpec.create("llama3.2-3b", "decode_32k", MESH, power=HOT),  # dominated
+    CellSpec.create("qwen1.5-110b", "train_4k", {"data": 2, "model": 2}),
+]
+
+
+def test_screen_drop_reasons():
+    rep = screen_cells(_SMALL_FLEET)
+    assert len(rep.kept) == 2 and len(rep.dropped) == 2
+    reasons = {d.key: d.reason for d in rep.dropped}
+    assert reasons["qwen1.5-110b/train_4k/data2xmodel2"] == "infeasible"
+    hot_key = [k for k in reasons if "@pw:" in k][0]
+    # low-AI decode on a dominated destination: roofline-labeled floor drop
+    assert reasons[hot_key] == "intensity-floor"
+    assert rep.statics[hot_key].classification == "memory-bound"
+
+
+def test_screen_keeps_multistart_and_backend_cells():
+    cells = [
+        CellSpec.create("llama3.2-3b", "decode_32k", MESH),
+        CellSpec.create("llama3.2-3b", "decode_32k", MESH, seed=1),
+        CellSpec.create("llama3.2-3b", "decode_32k", MESH, backend="nope"),
+    ]
+    rep = screen_cells(cells)
+    # identical multi-start points tie exactly -> never "dominated"; a
+    # backend cell is opaque to the analytic model -> never screened
+    assert rep.dropped == [] and len(rep.kept) == 3
+
+
+def test_screened_sweep_bit_identical_and_prunes():
+    ga = GAConfig(population=4, generations=4, seed=0)
+    plain = search_fleet(_SMALL_FLEET, ga_config=ga,
+                         engine=EvalEngine(executor=VectorizedExecutor()))
+    eng = EvalEngine(executor=VectorizedExecutor())
+    screened = search_fleet(_SMALL_FLEET, ga_config=ga, engine=eng,
+                            screen=True)
+    assert screened.screen is not None
+    assert len(eng.screened_cells) == 2
+    assert screened.evaluations < plain.evaluations  # measurements avoided
+    plain_by, scr_by = plain.by_cell(), screened.by_cell()
+    assert set(scr_by) < set(plain_by)
+    for cell in scr_by:
+        assert (plain_by[cell].search.ga.best.genome
+                == scr_by[cell].search.ga.best.genome)
+    assert ([(p.cell, p.genome, p.time_s, p.energy_ws)
+             for p in plain.frontier]
+            == [(p.cell, p.genome, p.time_s, p.energy_ws)
+                for p in screened.frontier])
+
+
+def test_screen_policy_can_disable_rules():
+    rep = screen_cells(_SMALL_FLEET, policy=ScreenPolicy(
+        infeasible=False, dominance=False))
+    assert rep.dropped == [] and len(rep.kept) == len(_SMALL_FLEET)
+
+
+# ---------------------------------------------------------------------------
+# CLI + baseline gate
+# ---------------------------------------------------------------------------
+
+
+def _load_cli():
+    import importlib.util
+
+    path = Path(__file__).resolve().parent.parent / "tools" / "offload_lint.py"
+    spec = importlib.util.spec_from_file_location("offload_lint_cli", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_cli_baseline_gate(tmp_path, monkeypatch, capsys):
+    cli = _load_cli()
+    from repro.analysis.offload_lint import Finding
+
+    fake = [Finding("host-sync", "error", "decode/dense/x", "boom")]
+    monkeypatch.setattr(cli, "collect_findings",
+                        lambda *a, **k: (fake, {}))
+
+    baseline = tmp_path / "baseline.json"
+    # no baseline -> the finding is new -> gate fails
+    assert cli.main(["--baseline", str(baseline)]) == 1
+    # accept it into the baseline -> gate passes, reported as baselined
+    assert cli.main(["--baseline", str(baseline),
+                     "--update-baseline"]) == 0
+    assert json.loads(baseline.read_text())["accepted"] \
+        == ["host-sync:decode/dense/x"]
+    assert cli.main(["--baseline", str(baseline)]) == 0
+    # finding disappears -> reported fixed, still passes
+    monkeypatch.setattr(cli, "collect_findings", lambda *a, **k: ([], {}))
+    assert cli.main(["--baseline", str(baseline)]) == 0
+    assert "FIXED" in capsys.readouterr().out
+
+
+def test_checked_in_baseline_is_empty():
+    """The repo lints clean: the committed baseline carries no debt."""
+    path = Path(__file__).resolve().parent.parent / "tools" \
+        / "offload_lint_baseline.json"
+    data = json.loads(path.read_text())
+    assert data == {"version": 1, "accepted": []}
+
+
+# ---------------------------------------------------------------------------
+# Consistency property: analyzer vs arithmetic_intensity (satellite)
+# ---------------------------------------------------------------------------
+
+# Stated tolerances (documented in jaxpr_walk's module docstring): traced
+# FLOPs track the config model within ±10% (measured spread ≈ 1.00–1.04);
+# traced bytes are an UNFUSED upper bound, so they must be >= ~the unit
+# estimate and within a bounded constant of it (measured spread ≈ 2–12×).
+_FLOPS_BAND = (0.90, 1.10)
+_BYTES_BAND = (0.95, 16.0)
+
+
+@settings(max_examples=12, deadline=None)
+@given(arch=st.sampled_from(("llama3.2-3b", "rwkv6-1.6b", "zamba2-7b")),
+       batch=st.integers(1, 4),
+       seq_len=st.sampled_from((32, 64, 128)))
+def test_traced_costs_match_unit_costs(arch, batch, seq_len):
+    cfg = reduced(get_config(arch))
+    shape = ShapeSpec("cell", "decode", seq_len, batch)
+    units = lm_unit_costs(cfg, shape)
+    unit_flops = sum(u.total_flops for u in units)
+    unit_bytes = sum(u.total_bytes for u in units)
+
+    params = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    state = jax.eval_shape(lambda: T.init_decode_state(cfg, batch, seq_len))
+    tokens = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    rep = trace_and_walk(lambda p, s, t: T.decode_step(cfg, p, s, t),
+                         params, state, tokens)
+
+    flops_ratio = rep.flops / unit_flops
+    bytes_ratio = rep.hbm_bytes / unit_bytes
+    assert _FLOPS_BAND[0] <= flops_ratio <= _FLOPS_BAND[1], \
+        f"{arch} B={batch} S={seq_len}: flops ratio {flops_ratio:.3f}"
+    assert _BYTES_BAND[0] <= bytes_ratio <= _BYTES_BAND[1], \
+        f"{arch} B={batch} S={seq_len}: bytes ratio {bytes_ratio:.3f}"

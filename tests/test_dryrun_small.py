@@ -109,3 +109,102 @@ def test_remat_stats_counts_duplicate_dots():
     assert st["dot_signatures"] == 2
     assert st["duplicated_signatures"] == 1
     assert st["max_duplication"] == 2
+
+
+_WHILE_HLO = """
+%body.7 (p.1: (s32[], f32[256])) -> (s32[], f32[256]) {
+  %p.1 = (s32[], f32[256]) parameter(0)
+  %ar.1 = f32[256] all-reduce(%gte.1), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %tuple.1 = (s32[], f32[256]) tuple(%next, %ar.1)
+}
+
+%cond.9 (p.2: (s32[], f32[256])) -> pred[] {
+  %p.2 = (s32[], f32[256]) parameter(0)
+  %iv = s32[] get-tuple-element(%p.2), index=0
+  %limit = s32[] constant(12)
+  ROOT %lt = pred[] compare(%iv, %limit), direction=LT
+}
+
+ENTRY %main.20 (arg0: f32[256]) -> f32[256] {
+  %ag.0 = f32[512] all-gather(%arg0), replica_groups={{0,1}}, dimensions={0}
+  %w = (s32[], f32[256]) while(%init), condition=%cond.9, body=%body.7
+  ROOT %out = f32[256] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_stats_multiplies_while_trip_counts():
+    stats = collective_stats(_WHILE_HLO)
+    # all-reduce inside the 12-trip loop: 12 × 2·S·(n-1)/n
+    ar = 12 * 2 * 256 * 4 * 3 / 4
+    # all-gather in the entry computation counts once
+    ag = 512 * 4 * 1 / 2
+    assert stats.by_kind["all-reduce"] == pytest.approx(ar)
+    assert stats.by_kind["all-gather"] == pytest.approx(ag)
+    assert stats.count == 13
+
+
+def test_collective_stats_underivable_trip_counts_once():
+    # dynamic loop bound: the condition compares against another tuple
+    # element, not a constant — the body's collective must count once.
+    hlo = _WHILE_HLO.replace("%limit = s32[] constant(12)",
+                             "%limit = s32[] get-tuple-element(%p.2), index=1")
+    stats = collective_stats(hlo)
+    assert stats.by_kind["all-reduce"] == pytest.approx(2 * 256 * 4 * 3 / 4)
+    assert stats.count == 2
+
+
+def test_collective_stats_nested_while_trips_multiply():
+    hlo = """
+%inner_body.1 (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %ar.i = f32[64] all-reduce(%g), replica_groups={{0,1}}, to_apply=%add
+}
+
+%inner_cond.1 (p: (s32[], f32[64])) -> pred[] {
+  %k.i = s32[] constant(3)
+  ROOT %lt.i = pred[] compare(%iv.i, %k.i), direction=LT
+}
+
+%outer_body.1 (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %w.i = (s32[], f32[64]) while(%t), condition=%inner_cond.1, body=%inner_body.1
+}
+
+%outer_cond.1 (p: (s32[], f32[64])) -> pred[] {
+  %k.o = s32[] constant(5)
+  ROOT %lt.o = pred[] compare(%iv.o, %k.o), direction=LT
+}
+
+ENTRY %main.1 (a: f32[64]) -> f32[64] {
+  %w.o = (s32[], f32[64]) while(%t0), condition=%outer_cond.1, body=%outer_body.1
+}
+"""
+    stats = collective_stats(hlo)
+    assert stats.by_kind["all-reduce"] == pytest.approx(15 * 64 * 4)
+    assert stats.count == 15
+
+
+def test_collective_stats_iota_replica_groups_forms():
+    # iota form [g,n]<=[devices]: group size is the second number
+    hlo = "%ar = f32[64] all-reduce(%x), replica_groups=[2,8]<=[16], to_apply=%a"
+    stats = collective_stats(hlo)
+    assert stats.by_kind["all-reduce"] == pytest.approx(2 * 64 * 4 * 7 / 8)
+    # degenerate iota groups of one device move no bytes
+    hlo1 = "%ar = f32[64] all-reduce(%x), replica_groups=[16,1]<=[16], to_apply=%a"
+    assert collective_stats(hlo1).count == 0
+    # iota form with a transposed device order still parses group size
+    hlo2 = ("%ag = bf16[32,32] all-gather(%y), "
+            "replica_groups=[4,4]<=[2,8]T(1,0), dimensions={0}")
+    stats2 = collective_stats(hlo2)
+    assert stats2.by_kind["all-gather"] == pytest.approx(32 * 32 * 2 * 3 / 4)
+
+
+def test_shape_bytes_unknown_dtype_warns_not_raises():
+    from repro.core import hlo_analysis
+
+    hlo_analysis._warned_dtypes.discard("f8e8m0fnu")
+    hlo = ("%ar = f8e8m0fnu[128] all-reduce(%x), replica_groups={{0,1}}, "
+           "to_apply=%a")
+    with pytest.warns(UserWarning, match="unknown dtype 'f8e8m0fnu'"):
+        stats = collective_stats(hlo)
+    # bit-width fallback: f8... -> 1 byte/element
+    assert stats.by_kind["all-reduce"] == pytest.approx(2 * 128 * 1 * 1 / 2)

@@ -1,0 +1,128 @@
+"""Offload-lint CLI: static analysis gate for kernels + decode hot paths.
+
+Runs :mod:`repro.analysis.kernel_lint` over all four Pallas kernel
+families and :mod:`repro.analysis.offload_lint` over the dense/ssm/hybrid
+decode steps (including the real ``ServingEngine._step`` donation check),
+then gates against a checked-in baseline:
+
+* findings whose stable ID is **not** in the baseline are *new* → exit 1
+  (the CI ``offload-lint`` job fails the commit);
+* baselined findings are reported but tolerated (accepted debt);
+* baseline entries that no longer fire are reported as fixed (prune them
+  with ``--update-baseline``).
+
+Usage::
+
+    PYTHONPATH=src python tools/offload_lint.py              # human output
+    PYTHONPATH=src python tools/offload_lint.py --json out.json
+    PYTHONPATH=src python tools/offload_lint.py --update-baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+DEFAULT_BASELINE = ROOT / "tools" / "offload_lint_baseline.json"
+
+
+def collect_findings(kernel_families=None, model_families=None):
+    """Run both lint layers; returns (findings, stats-dict)."""
+    from repro.analysis.kernel_lint import lint_kernel_families
+    from repro.analysis.offload_lint import lint_model_families
+
+    kf, call_counts = lint_kernel_families(
+        kernel_families or tuple(_kernel_names()))
+    mf, reports = lint_model_families(
+        model_families or ("dense", "ssm", "hybrid"))
+    stats = {
+        "pallas_calls": call_counts,
+        "decode_regions": {
+            fam: {"flops": rep.flops, "hbm_bytes": rep.hbm_bytes,
+                  "intensity": rep.intensity, "eqns": rep.eqn_count}
+            for fam, rep in reports.items()},
+    }
+    return kf + mf, stats
+
+
+def _kernel_names():
+    from repro.analysis.kernel_lint import KERNEL_FAMILIES
+    return KERNEL_FAMILIES
+
+
+def load_baseline(path: Path) -> set[str]:
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    return set(data.get("accepted", []))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", default=None,
+                    help="write the machine-readable report here")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="accepted-findings file (default: %(default)s)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to exactly the current "
+                         "findings and exit 0")
+    args = ap.parse_args(argv)
+
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    findings, stats = collect_findings()
+    baseline_path = Path(args.baseline)
+    accepted = load_baseline(baseline_path)
+
+    fids = [f.fid for f in findings]
+    new = [f for f in findings if f.fid not in accepted]
+    fixed = sorted(accepted - set(fids))
+
+    if args.update_baseline:
+        baseline_path.write_text(json.dumps(
+            {"version": 1, "accepted": sorted(set(fids))}, indent=2) + "\n")
+        print("baseline updated: %d accepted finding(s) -> %s"
+              % (len(set(fids)), baseline_path))
+        return 0
+
+    counts: dict[str, int] = {}
+    for f in findings:
+        counts[f.severity] = counts.get(f.severity, 0) + 1
+
+    if args.json:
+        Path(args.json).write_text(json.dumps({
+            "findings": [f.to_json() for f in findings],
+            "counts": counts,
+            "new": [f.fid for f in new],
+            "fixed_baseline_entries": fixed,
+            "baseline": str(baseline_path),
+            "stats": stats,
+        }, indent=2) + "\n")
+
+    for f in findings:
+        marker = "NEW " if f.fid in {n.fid for n in new} else ""
+        print("%s%-5s %s — %s" % (marker, f.severity.upper(), f.fid,
+                                  f.message))
+    for fid in fixed:
+        print("FIXED (prune from baseline): %s" % fid)
+    print("offload-lint: %d finding(s) (%s), %d new, %d baselined, "
+          "%d fixed baseline entr%s"
+          % (len(findings),
+             ", ".join("%d %s" % (n, s) for s, n in sorted(counts.items()))
+             or "none",
+             len(new), len(findings) - len(new), len(fixed),
+             "y" if len(fixed) == 1 else "ies"))
+    if new:
+        print("offload-lint: FAIL — new findings above are not in the "
+              "baseline (%s)" % baseline_path)
+        return 1
+    print("offload-lint: clean against baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
