@@ -14,6 +14,9 @@ Sections:
                     energy routing vs round-robin vs single engines
   traffic_*       — diurnal open-loop workload vs energy-proportional
                     autoscaling (Watt·s/1k on the full bill incl. idle)
+  provision_*     — budgeted capacity planning: which destinations to
+                    BUILD under a watt budget (cost-of-capacity frontier;
+                    recommended mix vs catalog-all and homogeneous builds)
   power_*         — metered Watt·s through the telemetry layer (Fig.5 via
                     trace integration; model calibration vs measurements)
   roofline_*      — §Roofline summary per dry-run cell (when records exist)
@@ -27,10 +30,11 @@ Sections:
 every benchmark that produces one (fleet, serving, router, power).
 ``--bench-out PATH`` writes one perf-trajectory artifact to an explicit
 path: the serving artifact when 'serving' is among the selected sections,
-else the traffic artifact (CI: ``BENCH_serving.json`` / ``BENCH_traffic.json``
+else the traffic artifact, else the provision artifact (CI:
+``BENCH_serving.json`` / ``BENCH_traffic.json`` / ``BENCH_provision.json``
 at the repo root, uploaded per commit). ``--only a,b`` restricts the run to
-named sections (himeno, ga, fleet, serving, traffic, router, power, kernel,
-analysis, e2e, roofline).
+named sections (himeno, ga, fleet, serving, traffic, provision, router,
+power, kernel, analysis, e2e, roofline).
 See benchmarks/README.md for the flag and artifact-schema reference.
 """
 from __future__ import annotations
@@ -41,8 +45,8 @@ import sys
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-SECTIONS = ("himeno", "ga", "fleet", "serving", "traffic", "router",
-            "power", "kernel", "analysis", "e2e", "roofline")
+SECTIONS = ("himeno", "ga", "fleet", "serving", "traffic", "provision",
+            "router", "power", "kernel", "analysis", "e2e", "roofline")
 
 
 def main() -> None:
@@ -66,11 +70,15 @@ def main() -> None:
     unknown = only - set(SECTIONS)
     if unknown:
         ap.error(f"unknown --only sections: {sorted(unknown)}")
-    if args.bench_out and not {"serving", "traffic"} & only:
-        ap.error("--bench-out writes the serving or traffic artifact; "
-                 "include one of them in --only (or drop --only)")
+    if args.bench_out and not {"serving", "traffic", "provision"} & only:
+        ap.error("--bench-out writes the serving, traffic or provision "
+                 "artifact; include one of them in --only (or drop --only)")
     serving_out = args.bench_out if "serving" in only else None
-    traffic_out = args.bench_out if serving_out is None else None
+    traffic_out = (args.bench_out
+                   if serving_out is None and "traffic" in only else None)
+    provision_out = (args.bench_out
+                     if serving_out is None and traffic_out is None
+                     else None)
 
     def art(name: str):
         return os.path.join(jd, f"BENCH_{name}.json") if jd else None
@@ -92,6 +100,10 @@ def main() -> None:
     if "traffic" in only:
         from benchmarks import traffic_bench
         rows += traffic_bench.run(json_path=traffic_out or art("traffic"))
+    if "provision" in only:
+        from benchmarks import provision_bench
+        rows += provision_bench.run(
+            json_path=provision_out or art("provision"))
     if "router" in only:
         from benchmarks import router_bench
         rows += router_bench.run(json_path=art("router"))

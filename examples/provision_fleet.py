@@ -1,0 +1,79 @@
+"""Capacity-planning example: which destinations should we BUILD?
+
+Everything else in this repo decides how to use hardware that already
+exists. The provisioning layer (``repro.provision``) answers the operator
+question upstream of all of it: given a total power budget and a traffic
+forecast, which destination types — and how many of each — are worth
+standing up at all. It prices every catalog destination with the same
+per-cell GA + Pareto sweep the router uses (through a shared persisted
+measurement cache), then searches the space of destination *multisets*
+under the budget, billing each candidate build's idle floors as well as
+its marginal serving energy, and finally sweeps the budget to draw the
+cost-of-capacity frontier.
+
+    PYTHONPATH=src python examples/provision_fleet.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import DESTINATIONS
+from repro.core.ga import GAConfig
+from repro.provision import (
+    Budget, cost_of_capacity_frontier, destination_economics, plan_fleet,
+)
+from repro.runtime.placement import DEFAULT_CATALOG
+from repro.workload import TenantSpec, WorkloadSpec
+from repro.workload.forecast import WorkloadForecast
+
+
+def main():
+    # 1. Forecast: the diurnal two-tenant workload we expect to serve
+    # (seed-deterministic — the same spec always yields the same forecast).
+    spec = WorkloadSpec(
+        seed=7, duration_s=0.06, rate_rps=15000.0, max_len=32,
+        arrival="poisson", diurnal_period_s=0.06, diurnal_trough=0.15,
+        diurnal_peak=2.0,
+        tenants=(
+            TenantSpec("chat", weight=3.0, prompt_median=6, prompt_max=14,
+                       new_tokens_median=4, new_tokens_max=8, slo_s=0.05),
+            TenantSpec("batch", weight=1.0, prompt_median=10, prompt_max=20,
+                       new_tokens_median=6, new_tokens_max=10),
+        ))
+    forecast = WorkloadForecast.from_spec(spec)
+    print(f"forecast: mean {forecast.mean_tps:.0f} tok/s, "
+          f"peak {forecast.peak_tps:.0f} tok/s, "
+          f"prefill {forecast.prefill_frac:.0%}")
+
+    # 2. Economics: price every catalog destination per token (one shared
+    # GA sweep; re-running hits the persisted cache and measures nothing).
+    econ = destination_economics(
+        "llama3.2-3b", list(DESTINATIONS.values()), shapes=DEFAULT_CATALOG,
+        slots=2, cache_path="results/eval_cache.jsonl",
+        ga_config=GAConfig(population=6, generations=4, seed=0))
+    for e in econ.economics:
+        print(f"  {e.name:<10} peak {e.spec.peak_watts:>7.0f} W  "
+              f"capacity {e.capacity_tps:>7.0f} tok/s  "
+              f"mix-energy {e.mix_energy_per_token_ws(forecast.prefill_frac):.3f} Ws/tok")
+
+    # 3. Plan: the best build under a 45 kW budget.
+    result = plan_fleet(econ.economics, Budget.create(45000.0), forecast)
+    best = result.best
+    print(f"plan ({result.method}, {result.evaluated} builds): "
+          f"{best.genome.label} — {best.provisioned_watts:.0f} W nameplate, "
+          f"serves {best.served_tps:.0f} tok/s at "
+          f"{best.ws_per_1k:.1f} Ws/1k (SLOs {'hold' if best.slo_ok else 'MISS'})")
+
+    # 4. Frontier: what each extra kilowatt of budget buys.
+    frontier = cost_of_capacity_frontier(
+        econ.economics, (16000.0, 30000.0, 45000.0, 60000.0, 120000.0),
+        forecast)
+    print("cost of capacity:")
+    for p in frontier:
+        mix = "+".join(f"{c}x{n}" for n, c in p.mix)
+        print(f"  {p.budget_w:>7.0f} W budget -> {p.served_tps:>7.0f} tok/s "
+              f"({p.provisioned_watts:>7.0f} W built: {mix})")
+
+
+if __name__ == "__main__":
+    main()

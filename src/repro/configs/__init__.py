@@ -14,7 +14,7 @@ from repro.configs.base import (
 # the (already import-safe) core package — keep it below the base re-exports
 # so core modules importing repro.configs.base never see a partial package.
 from repro.configs.destinations import (
-    DESTINATIONS, DestinationSpec, mixed_fleet,
+    DESTINATIONS, DestinationSpec, calibrated_catalog, mixed_fleet,
 )
 
 __all__ = [
@@ -29,5 +29,6 @@ __all__ = [
     "smoke_shape",
     "DESTINATIONS",
     "DestinationSpec",
+    "calibrated_catalog",
     "mixed_fleet",
 ]

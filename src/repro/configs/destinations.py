@@ -30,9 +30,15 @@ heterogeneous line-up used by ``benchmarks/router_bench.py``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
+from typing import Optional
 
 from repro.core.power import TpuPowerModel
+
+# Die area of one chip in the catalog's abstract area unit (the provisioning
+# layer's chip-area budgets are relative, like lumos's area fractions — the
+# unit cancels as long as specs and budgets use the same one).
+CHIP_AREA_UNITS = 1.0
 
 
 @dataclass(frozen=True)
@@ -57,6 +63,41 @@ class DestinationSpec:
     floor_frac: float = 0.4
     sleep_frac: float = 0.05
     floor_wake_s: float = 0.0
+    # Slice die area for provisioning area budgets; 0.0 = default from the
+    # mesh size (chips x CHIP_AREA_UNITS) in __post_init__.
+    area: float = 0.0
+
+    def __post_init__(self) -> None:
+        def bad(msg: str) -> ValueError:
+            return ValueError(f"DestinationSpec {self.name!r}: {msg}")
+
+        if not self.name:
+            raise bad("name must be non-empty")
+        if not self.mesh or any(v <= 0 for _, v in self.mesh):
+            raise bad(f"mesh axes must all be positive, got {self.mesh!r}")
+        for coeff in ("p_idle", "p_mxu", "p_hbm", "p_ici"):
+            w = getattr(self.power, coeff)
+            if w < 0.0:
+                raise bad(f"power.{coeff} = {w} W is negative — a slice "
+                          "cannot generate energy (idle_watts and every "
+                          "component draw must be >= 0)")
+        if self.verify_cost_s < 0.0:
+            raise bad(f"verify_cost_s = {self.verify_cost_s} must be >= 0")
+        for frac in ("floor_frac", "sleep_frac"):
+            v = getattr(self, frac)
+            if not 0.0 <= v <= 1.0:
+                raise bad(f"{frac} = {v} must lie in [0, 1] (a fraction of "
+                          "the awake idle floor)")
+        if self.wake_s < 0.0 or self.floor_wake_s < 0.0:
+            raise bad("wake latencies must be >= 0")
+        if self.wake_s < self.floor_wake_s:
+            raise bad(f"wake_s = {self.wake_s} < floor_wake_s = "
+                      f"{self.floor_wake_s}: waking from deep sleep cannot "
+                      "be faster than waking from the DVFS floor")
+        if self.area < 0.0:
+            raise bad(f"area = {self.area} must be >= 0")
+        if self.area == 0.0:
+            object.__setattr__(self, "area", self.chips * CHIP_AREA_UNITS)
 
     @property
     def mesh_shape(self) -> dict[str, int]:
@@ -76,6 +117,16 @@ class DestinationSpec:
         subtraction quantifies, and what an always-on fleet burns per
         second whether or not a single token flows."""
         return self.power.p_idle * self.chips
+
+    @property
+    def peak_watts(self) -> float:
+        """Nameplate draw of the whole slice: every component active at
+        full utilization. What power delivery must be built to stand the
+        destination up — the number a provisioning Watt budget
+        (``repro.provision``) debits, whether or not the slice ever runs
+        that hot."""
+        p = self.power
+        return (p.p_idle + p.p_mxu + p.p_hbm + p.p_ici) * self.chips
 
 
 def _spec(name: str, mesh_shape: dict[str, int], power: TpuPowerModel,
@@ -123,3 +174,34 @@ def mixed_fleet(names: tuple[str, ...] = ("pod2_v5e", "mxu_dense", "hbm_lp")
     default because ``pod2_v5e`` Pareto-dominates it (include it explicitly
     to exercise drain/rebalance)."""
     return [DESTINATIONS[n] for n in names]
+
+
+# Where telemetry calibration persists fitted coefficients (next to the
+# persisted EvalCache, so calibration accumulates across processes).
+DEFAULT_FITS_PATH = "results/power_fits.json"
+
+
+def calibrated_catalog(
+    fits_path: str = DEFAULT_FITS_PATH,
+    base: Optional[dict[str, DestinationSpec]] = None,
+) -> dict[str, DestinationSpec]:
+    """The catalog with learned silicon: destinations whose name has a
+    persisted :func:`repro.telemetry.calibrate.fit_tpu_model` fit (saved by
+    ``telemetry.calibrate.save_tpu_fits``) get their documented power model
+    replaced by the fitted coefficients; everything else keeps the catalog
+    default. Missing or unreadable fit files degrade to the plain catalog,
+    so provisioning and routing can always ask for the calibrated view.
+
+    Replacing ``power`` re-runs ``__post_init__`` validation, so a
+    non-physical fit (negative watts — impossible from the clamped
+    least-squares, but possible from a hand-edited file) is rejected
+    loudly rather than silently planned against.
+    """
+    catalog = dict(base if base is not None else DESTINATIONS)
+    from repro.telemetry.calibrate import load_tpu_fits
+
+    for name, model in load_tpu_fits(fits_path).items():
+        spec = catalog.get(name)
+        if spec is not None:
+            catalog[name] = replace(spec, power=model)
+    return catalog

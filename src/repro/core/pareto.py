@@ -182,6 +182,32 @@ def provision_awake_set(candidates: Sequence[CapacityPoint],
     return awake
 
 
+def allocate_demand(candidates: Sequence[CapacityPoint], demand_tps: float
+                    ) -> dict[str, float]:
+    """Greedy demand split across an awake set: fill destinations in
+    ascending amortized Watt·s/token at their own capacity (same ranking as
+    :func:`provision_awake_set`, same catalog-order tie-break), each up to
+    its sustainable throughput, until ``demand_tps`` is placed. Unplaced
+    demand (the fleet is under-provisioned) is silently dropped — callers
+    compare ``sum(result.values())`` against the demand to detect it. The
+    marginal-energy integral of this split is what a provisioning search
+    bills a candidate fleet for serving its forecast mean rate."""
+    remaining = max(demand_tps, 0.0)
+    ranked = sorted(
+        candidates,
+        key=lambda c: (amortized_ws_per_token(
+            c.energy_per_token_ws, c.static_watts, c.capacity_tps),
+            c.order, c.name))
+    alloc: dict[str, float] = {}
+    for c in ranked:
+        take = min(remaining, max(c.capacity_tps, 0.0))
+        alloc[c.name] = take
+        remaining -= take
+        if remaining <= 0.0:
+            break
+    return alloc
+
+
 def narrow(points: Iterable[ParetoPoint], req: Optional[UserRequirement]
            ) -> list[ParetoPoint]:
     """§3.3 narrowing: keep the points satisfying the user requirement."""

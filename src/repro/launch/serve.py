@@ -14,6 +14,12 @@ instead: one engine per mixed-environment catalog destination
 (energy | latency | round_robin), with one shared sweep re-planning every
 engine mid-run when ``--adaptive`` is also set. Every served request
 reports which engine/destination billed it.
+
+``--provision-budget-w W`` (with ``--fleet``) runs the capacity planner
+first: instead of standing up the whole catalog, the fleet is the
+destination multiset ``repro.provision`` recommends under a W-watt
+nameplate budget for a small default forecast — the serve CLI's door into
+"which destinations should exist at all".
 """
 from __future__ import annotations
 
@@ -90,23 +96,63 @@ def serve(arch: str = "llama3.2-3b", *, use_reduced: bool = True,
     }
 
 
+def _provision_counts(arch: str, budget_w: float,
+                      cache_path: Optional[str]) -> dict[str, int]:
+    """Run the capacity planner: the destination multiset to build under a
+    ``budget_w``-watt nameplate budget for a small default diurnal
+    forecast (the provisioning bench's workload shape)."""
+    from repro.configs import DESTINATIONS
+    from repro.provision import Budget, destination_economics, plan_fleet
+    from repro.runtime.placement import DEFAULT_CATALOG
+    from repro.workload import TenantSpec, WorkloadSpec
+    from repro.workload.forecast import WorkloadForecast
+
+    spec = WorkloadSpec(
+        seed=7, duration_s=0.06, rate_rps=15000.0, max_len=32,
+        arrival="poisson", diurnal_period_s=0.06, diurnal_trough=0.15,
+        diurnal_peak=2.0,
+        tenants=(
+            TenantSpec("chat", weight=3.0, prompt_median=6, prompt_max=14,
+                       new_tokens_median=4, new_tokens_max=8, slo_s=0.05),
+            TenantSpec("batch", weight=1.0, prompt_median=10, prompt_max=20,
+                       new_tokens_median=6, new_tokens_max=10),
+        ))
+    econ = destination_economics(
+        arch, list(DESTINATIONS.values()), shapes=DEFAULT_CATALOG,
+        slots=2, cache_path=cache_path,
+        ga_config=GAConfig(population=10, generations=8, seed=0))
+    result = plan_fleet(econ.economics, Budget.create(budget_w),
+                        WorkloadForecast.from_spec(spec))
+    if result.best is None:
+        raise SystemExit(f"--provision-budget-w {budget_w}: no destination "
+                         "type is buildable under that budget")
+    return result.counts
+
+
 def serve_fleet(arch: str = "llama3.2-3b", *, use_reduced: bool = True,
                 num_requests: int = 8, slots: int = 2,
                 max_new_tokens: int = 8, max_len: int = 64,
                 policy: str = "energy", adaptive: bool = False,
                 cache_path: Optional[str] = "results/eval_cache.jsonl",
-                scheduler: str = "stream") -> dict:
+                scheduler: str = "stream",
+                provision_budget_w: Optional[float] = None) -> dict:
     """Serve across the mixed-destination fleet (one engine per catalog
     destination). With ``adaptive``, one shared sweep re-plans every engine
-    between two serving phases."""
+    between two serving phases. With ``provision_budget_w``, the fleet is
+    not the whole catalog but the multiset the capacity planner recommends
+    under that nameplate watt budget."""
     cfg = get_config(arch)
     if use_reduced:
         cfg = reduce_cfg(cfg)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    router = FleetRouter(cfg, params, mixed_fleet(), arch=arch,
-                         policy=policy, slots=slots, max_len=max_len,
-                         scheduler=scheduler, cache_path=cache_path,
-                         ga_config=GAConfig(population=10, generations=8))
+    kwargs = dict(arch=arch, policy=policy, slots=slots, max_len=max_len,
+                  scheduler=scheduler, cache_path=cache_path,
+                  ga_config=GAConfig(population=10, generations=8))
+    if provision_budget_w is not None:
+        counts = _provision_counts(arch, provision_budget_w, cache_path)
+        router = FleetRouter.provisioned(cfg, params, counts, **kwargs)
+    else:
+        router = FleetRouter(cfg, params, mixed_fleet(), **kwargs)
     reqs = _requests(num_requests, max_new_tokens)
     half = len(reqs) // 2 if adaptive else len(reqs)
     t0 = time.time()
@@ -161,13 +207,21 @@ def main() -> None:
     ap.add_argument("--policy", default="energy",
                     choices=("energy", "latency", "round_robin"),
                     help="fleet routing policy (with --fleet)")
+    ap.add_argument("--provision-budget-w", type=float, default=None,
+                    help="with --fleet: run the capacity planner and serve "
+                         "on the destination multiset it recommends under "
+                         "this nameplate watt budget, instead of the whole "
+                         "catalog")
     args = ap.parse_args()
+    if args.provision_budget_w is not None and not args.fleet:
+        ap.error("--provision-budget-w requires --fleet")
     if args.fleet:
         out = serve_fleet(args.arch, use_reduced=not args.full,
                           num_requests=args.requests, slots=args.slots,
                           max_new_tokens=args.max_new_tokens,
                           policy=args.policy, adaptive=args.adaptive,
-                          scheduler=args.scheduler)
+                          scheduler=args.scheduler,
+                          provision_budget_w=args.provision_budget_w)
     else:
         out = serve(args.arch, use_reduced=not args.full,
                     num_requests=args.requests, slots=args.slots,

@@ -218,6 +218,40 @@ class FleetRouter:
         self._last_observe_t: Optional[float] = None
         self._idle_since: dict[str, float] = {}
 
+    @classmethod
+    def provisioned(
+        cls,
+        cfg,
+        params,
+        counts: dict[str, int],
+        *,
+        catalog: Optional[dict[str, DestinationSpec]] = None,
+        **kwargs,
+    ) -> "FleetRouter":
+        """Build a router from a provisioning plan's destination multiset.
+
+        ``counts`` maps destination-type names to instance counts — exactly
+        what :class:`~repro.provision.planner.ProvisionResult` recommends
+        (``result.counts``). ``catalog`` resolves names to specs (default:
+        the built-in destination catalog); remaining keyword arguments pass
+        through to the constructor unchanged. Types appear in catalog
+        order, so the engine naming (``"<dest>:<i>"``) is deterministic
+        for a given plan.
+        """
+        from repro.configs.destinations import DESTINATIONS
+        table = dict(catalog or DESTINATIONS)
+        unknown = set(counts) - set(table)
+        if unknown:
+            raise ValueError(
+                f"provisioned counts name unknown destinations "
+                f"{sorted(unknown)}; catalog has {sorted(table)}")
+        destinations: list[DestinationSpec] = []
+        for name, spec in table.items():
+            destinations.extend([spec] * max(int(counts.get(name, 0)), 0))
+        if not destinations:
+            raise ValueError("provisioned counts expand to an empty fleet")
+        return cls(cfg, params, destinations, **kwargs)
+
     # -- fleet surface -------------------------------------------------
     @property
     def bindings(self) -> list[EngineBinding]:

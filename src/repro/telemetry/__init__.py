@@ -30,7 +30,8 @@ from repro.telemetry.backends import (
 )
 from repro.telemetry.calibrate import (
     CalibrationReport, CellError, PaperSample, TpuSample, error_report,
-    fit_paper_model, fit_tpu_model, report_from_metered,
+    fit_paper_model, fit_tpu_model, load_tpu_fits, report_from_metered,
+    save_tpu_fits,
 )
 
 __all__ = [
@@ -40,6 +41,6 @@ __all__ = [
     "finalize_trace", "meter_trace", "trapezoid_ws",
     "DEFAULT_HZ", "MeteredBackend", "metered_lm_backend",
     "CalibrationReport", "CellError", "PaperSample", "TpuSample",
-    "error_report", "fit_paper_model", "fit_tpu_model",
-    "report_from_metered",
+    "error_report", "fit_paper_model", "fit_tpu_model", "load_tpu_fits",
+    "report_from_metered", "save_tpu_fits",
 ]

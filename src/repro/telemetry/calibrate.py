@@ -22,13 +22,17 @@ clean synthesized traces the unclamped solution is already non-negative).
 """
 from __future__ import annotations
 
+import json
+import os
 from dataclasses import dataclass
-from typing import Iterable, Optional, Sequence
+from typing import Iterable, Mapping, Optional, Sequence
 
 import numpy as np
 
 from repro.core.fitness import Measurement
 from repro.core.power import PaperPowerModel, TpuPowerModel
+
+FITS_SCHEMA = 1
 
 
 # ---------------------------------------------------------------------------
@@ -119,6 +123,53 @@ def fit_tpu_model(samples: Sequence[TpuSample]) -> TpuPowerModel:
                          np.array([s.metered_ws for s in samples]))
     return TpuPowerModel(p_idle=float(coef[0]), p_mxu=float(coef[1]),
                          p_hbm=float(coef[2]), p_ici=float(coef[3]))
+
+
+# ---------------------------------------------------------------------------
+# Fit persistence (ROADMAP 4b: the catalog learns silicon across processes)
+# ---------------------------------------------------------------------------
+
+
+def save_tpu_fits(path: str, fits: Mapping[str, TpuPowerModel]) -> None:
+    """Persist fitted TPU power models keyed by catalog destination name
+    (``configs/destinations.py``), next to the persisted EvalCache. The
+    file is the hand-off between calibration and planning:
+    ``configs.destinations.calibrated_catalog`` overlays these coefficients
+    onto the catalog, so a fleet provisioned tomorrow plans against the
+    silicon metered today."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    record = {
+        "schema": FITS_SCHEMA,
+        "fits": {name: {"p_idle": m.p_idle, "p_mxu": m.p_mxu,
+                        "p_hbm": m.p_hbm, "p_ici": m.p_ici}
+                 for name, m in sorted(fits.items())},
+    }
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump(record, fh, indent=2, sort_keys=True)
+
+
+def load_tpu_fits(path: str) -> dict[str, TpuPowerModel]:
+    """Load persisted fits; {} when the file is absent, unreadable or the
+    wrong schema — calibration overlays must never make the catalog
+    unavailable."""
+    try:
+        with open(path, "r", encoding="utf-8") as fh:
+            record = json.load(fh)
+    except (OSError, ValueError):
+        return {}
+    if not isinstance(record, dict) or record.get("schema") != FITS_SCHEMA:
+        return {}
+    out: dict[str, TpuPowerModel] = {}
+    for name, coeffs in (record.get("fits") or {}).items():
+        try:
+            out[name] = TpuPowerModel(
+                p_idle=float(coeffs["p_idle"]), p_mxu=float(coeffs["p_mxu"]),
+                p_hbm=float(coeffs["p_hbm"]), p_ici=float(coeffs["p_ici"]))
+        except (KeyError, TypeError, ValueError):
+            continue  # a malformed entry never poisons the rest
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -7,6 +7,7 @@ multi-tenant SLO classes); ``driver`` replays a trace against a
 energy-proportional power-state accounting.
 """
 from repro.workload.driver import SimReport, simulate
+from repro.workload.forecast import TenantForecast, WorkloadForecast
 from repro.workload.generator import (
     ARRIVALS, TenantSpec, TimedRequest, WorkloadSpec, diurnal_mult,
     empirical_rate_rps, generate, mean_diurnal_mult, trace_bytes,
@@ -14,7 +15,8 @@ from repro.workload.generator import (
 )
 
 __all__ = [
-    "ARRIVALS", "SimReport", "TenantSpec", "TimedRequest", "WorkloadSpec",
-    "diurnal_mult", "empirical_rate_rps", "generate", "mean_diurnal_mult",
-    "simulate", "trace_bytes", "trace_digest",
+    "ARRIVALS", "SimReport", "TenantForecast", "TenantSpec", "TimedRequest",
+    "WorkloadForecast", "WorkloadSpec", "diurnal_mult", "empirical_rate_rps",
+    "generate", "mean_diurnal_mult", "simulate", "trace_bytes",
+    "trace_digest",
 ]

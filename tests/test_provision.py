@@ -1,0 +1,502 @@
+"""Budgeted fleet provisioning: budgets, economics, multiset search,
+cost-of-capacity frontiers, catalog validation and calibration overlay.
+
+Property tests ride the `_hypothesis_compat` shim: real hypothesis in CI,
+a deterministic boundary grid in the bare container.
+"""
+import json
+
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.destinations import (
+    DESTINATIONS, DestinationSpec, calibrated_catalog,
+)
+from repro.core.pareto import CapacityPoint, allocate_demand
+from repro.core.power import TpuPowerModel
+from repro.provision import (
+    Budget, DestinationEconomics, FleetGenome, KindRate, SearchPolicy,
+    cost_of_capacity_frontier, evaluate_fleet, plan_fleet,
+)
+from repro.workload.forecast import TenantForecast, WorkloadForecast
+
+
+# ---------------------------------------------------------------------------
+# fixtures: a small synthetic catalog priced by hand (no GA)
+# ---------------------------------------------------------------------------
+
+
+def _spec(name, axes=2, p_idle=10.0, **kw):
+    return DestinationSpec(
+        name=name, mesh=(("data", axes),),
+        power=TpuPowerModel(p_idle=p_idle), verify_cost_s=0.0, **kw)
+
+
+def _econ(spec, order, prefill, decode, slots=2):
+    """prefill/decode are (energy_ws_per_token, time_s_per_token)."""
+    return DestinationEconomics(
+        spec=spec, order=order, slots=slots,
+        rates=(KindRate("prefill", *prefill), KindRate("decode", *decode)))
+
+
+@pytest.fixture(scope="module")
+def synthetic():
+    # "big": fast, hungry, high idle. "eff": cheap, slower. "lp": cheapest
+    # energy, slowest, tiny idle.
+    big = _econ(_spec("big", axes=8, p_idle=20.0), 0,
+                prefill=(0.5, 1e-5), decode=(0.8, 4e-5))
+    eff = _econ(_spec("eff", axes=4, p_idle=10.0), 1,
+                prefill=(0.3, 2e-5), decode=(0.5, 8e-5))
+    lp = _econ(_spec("lp", axes=1, p_idle=2.0), 2,
+               prefill=(0.2, 8e-5), decode=(0.25, 2e-4))
+    return [big, eff, lp]
+
+
+@pytest.fixture(scope="module")
+def forecast():
+    return WorkloadForecast(
+        duration_s=10.0, requests=200, total_tokens=400_000,
+        mean_tps=40_000.0, peak_tps=90_000.0, prefill_frac=0.6,
+        tenants=(TenantForecast("chat", 120, 32, 16, 0.05),
+                 TenantForecast("batch", 80, 128, 64, None)),
+        trace_digest="synthetic")
+
+
+# ---------------------------------------------------------------------------
+# DestinationSpec validation + area (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+class TestDestinationSpecValidation:
+    def test_catalog_validates(self):
+        for spec in DESTINATIONS.values():
+            assert spec.area > 0.0  # __post_init__ ran
+
+    def test_area_defaults_to_chips(self):
+        s = _spec("x", axes=4)
+        assert s.area == s.chips == 4
+
+    def test_explicit_area_kept(self):
+        assert _spec("x", area=7.5).area == 7.5
+
+    def test_peak_watts_is_all_components_times_chips(self):
+        s = DestinationSpec(
+            name="x", mesh=(("data", 3),),
+            power=TpuPowerModel(p_idle=1.0, p_mxu=2.0, p_hbm=3.0,
+                                p_ici=4.0),
+            verify_cost_s=0.0)
+        assert s.peak_watts == pytest.approx(30.0)
+        assert s.idle_watts == pytest.approx(3.0)
+
+    def test_negative_idle_rejected(self):
+        with pytest.raises(ValueError, match="p_idle"):
+            _spec("x", p_idle=-1.0)
+
+    def test_fracs_outside_unit_interval_rejected(self):
+        with pytest.raises(ValueError, match="floor_frac"):
+            _spec("x", floor_frac=1.5)
+        with pytest.raises(ValueError, match="sleep_frac"):
+            _spec("x", sleep_frac=-0.1)
+
+    def test_wake_faster_than_floor_wake_rejected(self):
+        with pytest.raises(ValueError, match="floor_wake_s"):
+            _spec("x", wake_s=0.1, floor_wake_s=0.2)
+
+    def test_negative_area_rejected(self):
+        with pytest.raises(ValueError, match="area"):
+            _spec("x", area=-1.0)
+
+    def test_empty_mesh_rejected(self):
+        with pytest.raises(ValueError, match="mesh"):
+            DestinationSpec(name="x", mesh=(),
+                            power=TpuPowerModel(), verify_cost_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# calibrated_catalog (satellite 2)
+# ---------------------------------------------------------------------------
+
+
+class TestCalibratedCatalog:
+    def test_missing_fits_file_returns_base(self, tmp_path):
+        cat = calibrated_catalog(fits_path=str(tmp_path / "nope.json"))
+        assert set(cat) == set(DESTINATIONS)
+        assert cat["pod_v5e"].power == DESTINATIONS["pod_v5e"].power
+
+    def test_fit_overlay_round_trip(self, tmp_path):
+        from repro.telemetry import load_tpu_fits, save_tpu_fits
+
+        path = str(tmp_path / "power_fits.json")
+        fitted = TpuPowerModel(p_idle=55.0, p_mxu=111.0, p_hbm=22.0,
+                               p_ici=3.0)
+        save_tpu_fits(path, {"mxu_dense": fitted})
+        assert load_tpu_fits(path)["mxu_dense"] == fitted
+
+        cat = calibrated_catalog(fits_path=path)
+        assert cat["mxu_dense"].power == fitted
+        # the overlay re-runs validation and keeps everything else intact
+        assert cat["mxu_dense"].mesh == DESTINATIONS["mxu_dense"].mesh
+        assert cat["hbm_lp"].power == DESTINATIONS["hbm_lp"].power
+
+    def test_negative_fit_rejected_by_validation(self, tmp_path):
+        from repro.telemetry import save_tpu_fits
+
+        path = str(tmp_path / "bad_fits.json")
+        save_tpu_fits(path, {"hbm_lp": TpuPowerModel(p_idle=-5.0)})
+        with pytest.raises(ValueError, match="p_idle"):
+            calibrated_catalog(fits_path=path)
+
+    def test_unknown_destination_fits_ignored(self, tmp_path):
+        from repro.telemetry import save_tpu_fits
+
+        path = str(tmp_path / "extra.json")
+        save_tpu_fits(path, {"not_in_catalog": TpuPowerModel()})
+        assert set(calibrated_catalog(fits_path=path)) == set(DESTINATIONS)
+
+
+# ---------------------------------------------------------------------------
+# Budget
+# ---------------------------------------------------------------------------
+
+
+class TestBudget:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            Budget(watts=0.0)
+        with pytest.raises(ValueError):
+            Budget(watts=100.0, area=-1.0)
+        with pytest.raises(ValueError):
+            Budget(watts=100.0, count_caps=(("a", -1),))
+        with pytest.raises(ValueError):
+            Budget(watts=100.0, count_caps=(("a", 1), ("a", 2)))
+
+    def test_admits(self):
+        b = Budget.create(100.0, area=10.0)
+        assert b.admits(100.0, 10.0)
+        assert not b.admits(100.1, 1.0)
+        assert not b.admits(1.0, 10.1)
+        assert Budget.create(100.0).admits(99.0, 1e9)  # no area constraint
+
+    def test_caps(self):
+        b = Budget.create(100.0, count_caps={"eff": 2})
+        assert b.cap("eff", 10) == 2
+        assert b.cap("other", 10) == 10
+
+
+# ---------------------------------------------------------------------------
+# allocate_demand (core/pareto.py)
+# ---------------------------------------------------------------------------
+
+
+class TestAllocateDemand:
+    def test_fills_cheapest_first_then_spills(self):
+        pts = [CapacityPoint("a", 1.0, 0.0, 100.0, order=0),
+               CapacityPoint("b", 2.0, 0.0, 100.0, order=1)]
+        alloc = allocate_demand(pts, 150.0)
+        assert alloc == {"a": 100.0, "b": 50.0}
+
+    def test_unplaced_demand_dropped(self):
+        pts = [CapacityPoint("a", 1.0, 0.0, 100.0)]
+        alloc = allocate_demand(pts, 500.0)
+        assert sum(alloc.values()) == pytest.approx(100.0)
+
+    def test_static_floor_participates_in_ranking(self):
+        # b has cheaper marginal but a huge floor: amortized, a wins
+        pts = [CapacityPoint("a", 1.0, 10.0, 100.0, order=0),
+               CapacityPoint("b", 0.9, 1000.0, 100.0, order=1)]
+        alloc = allocate_demand(pts, 100.0)
+        assert alloc == {"a": 100.0}
+
+
+# ---------------------------------------------------------------------------
+# evaluate_fleet
+# ---------------------------------------------------------------------------
+
+
+class TestEvaluateFleet:
+    def test_nameplate_sums(self, synthetic, forecast):
+        g = FleetGenome.create({"big": 1, "lp": 2},
+                               [e.name for e in synthetic])
+        ev = evaluate_fleet(g, synthetic, Budget.create(1e9), forecast)
+        big, _, lp = synthetic
+        assert ev.provisioned_watts == pytest.approx(
+            big.spec.peak_watts + 2 * lp.spec.peak_watts)
+        assert ev.provisioned_area == pytest.approx(
+            big.spec.area + 2 * lp.spec.area)
+        assert ev.capacity_tps == pytest.approx(
+            big.capacity_tps + 2 * lp.capacity_tps)
+
+    def test_served_capped_by_capacity_and_peak(self, synthetic, forecast):
+        names = [e.name for e in synthetic]
+        small = evaluate_fleet(FleetGenome.create({"lp": 1}, names),
+                               synthetic, Budget.create(1e9), forecast)
+        assert small.served_tps == pytest.approx(small.capacity_tps)
+        huge = evaluate_fleet(FleetGenome.create({"big": 9}, names),
+                              synthetic, Budget.create(1e9), forecast)
+        assert huge.served_tps == pytest.approx(forecast.peak_tps)
+
+    def test_sleeping_instances_still_bill(self, synthetic, forecast):
+        """An over-built fleet pays: extra instances of the same type
+        sleep, but their sleep-fraction idle draw stays on the bill."""
+        names = [e.name for e in synthetic]
+        one = evaluate_fleet(FleetGenome.create({"big": 1}, names),
+                             synthetic, Budget.create(1e9), forecast)
+        four = evaluate_fleet(FleetGenome.create({"big": 4}, names),
+                              synthetic, Budget.create(1e9), forecast)
+        assert four.power_w > one.power_w
+        assert four.ws_per_1k > one.ws_per_1k
+
+    def test_power_bill_hand_computed(self, forecast):
+        # one instance, demand below capacity: bill = mean_served x e_mix
+        # + idle floor (the single instance is awake)
+        e = _econ(_spec("solo", axes=2, p_idle=5.0), 0,
+                  prefill=(0.4, 1e-5), decode=(0.6, 1e-5))
+        ev = evaluate_fleet(FleetGenome.create({"solo": 1}, ["solo"]),
+                            [e], Budget.create(1e9), forecast)
+        e_mix = 0.6 * 0.4 + 0.4 * 0.6  # prefill_frac=0.6
+        served = min(forecast.mean_tps, e.capacity_tps)
+        assert ev.power_w == pytest.approx(served * e_mix
+                                           + e.spec.idle_watts)
+
+    def test_slo_infeasible_when_no_type_fits(self, synthetic):
+        fc = WorkloadForecast(
+            duration_s=1.0, requests=1, total_tokens=100, mean_tps=100.0,
+            peak_tps=100.0, prefill_frac=0.5,
+            tenants=(TenantForecast("rt", 1, 1000, 1000, 1e-9),),
+            trace_digest="x")
+        names = [e.name for e in synthetic]
+        ev = evaluate_fleet(FleetGenome.create({"lp": 1}, names),
+                            synthetic, Budget.create(1e9), fc)
+        assert not ev.slo_ok and not ev.feasible
+
+    def test_within_budget_flag(self, synthetic, forecast):
+        names = [e.name for e in synthetic]
+        g = FleetGenome.create({"big": 1}, names)
+        over = evaluate_fleet(g, synthetic, Budget.create(1.0), forecast)
+        assert not over.within_budget and not over.feasible
+
+
+# ---------------------------------------------------------------------------
+# plan_fleet + frontier
+# ---------------------------------------------------------------------------
+
+
+class TestPlanFleet:
+    def test_exact_and_beam_agree(self, synthetic, forecast):
+        budget = Budget.create(500.0)
+        exact = plan_fleet(synthetic, budget, forecast,
+                           policy=SearchPolicy(max_enumeration=10**6))
+        beam = plan_fleet(synthetic, budget, forecast,
+                          policy=SearchPolicy(max_enumeration=1,
+                                              beam_width=16))
+        assert exact.method == "exact" and beam.method == "beam"
+        assert exact.best.genome == beam.best.genome
+
+    def test_nothing_buildable(self, synthetic, forecast):
+        tiny = Budget.create(0.5)  # below every type's peak watts
+        assert plan_fleet(synthetic, tiny, forecast).best is None
+
+    def test_count_caps_respected(self, synthetic, forecast):
+        res = plan_fleet(
+            synthetic, Budget.create(1e6, count_caps={"big": 0, "eff": 1}),
+            forecast, policy=SearchPolicy(max_count_per_type=8))
+        counts = res.best.genome.as_dict()
+        assert counts.get("big", 0) == 0
+        assert counts.get("eff", 0) <= 1
+
+    def test_destinations_expansion(self, synthetic, forecast):
+        res = plan_fleet(synthetic, Budget.create(1e6), forecast)
+        catalog = {e.name: e.spec for e in synthetic}
+        dests = res.destinations(catalog)
+        assert len(dests) == res.best.genome.total
+        assert [d.name for d in dests] == sorted(
+            [d.name for d in dests],
+            key=lambda n: [e.name for e in synthetic].index(n))
+
+    def test_frontier_carries_best_forward(self, synthetic, forecast):
+        frontier = cost_of_capacity_frontier(
+            synthetic, (50.0, 120.0, 500.0, 5000.0), forecast)
+        budgets = [p.budget_w for p in frontier]
+        assert budgets == sorted(budgets)
+        for p in frontier:
+            assert p.provisioned_watts <= p.budget_w
+
+
+# The ISSUE's three provisioning properties, via the hypothesis shim
+# (module-level: the shim's wrapper binds strategy args by keyword).
+
+
+@given(watts=st.floats(200.0, 5000.0))
+@settings(max_examples=20, deadline=None)
+def test_prop_recommendation_never_exceeds_budget(watts):
+    econ, fc = _module_synthetic()
+    res = plan_fleet(econ, Budget.create(watts), fc)
+    if res.best is not None:
+        assert res.best.provisioned_watts <= watts
+
+
+@given(watts=st.floats(100.0, 2000.0), area=st.floats(1.0, 20.0))
+@settings(max_examples=20, deadline=None)
+def test_prop_area_budget_respected(watts, area):
+    econ, fc = _module_synthetic()
+    res = plan_fleet(econ, Budget.create(watts, area=area), fc)
+    if res.best is not None:
+        assert res.best.provisioned_area <= area
+        assert res.best.provisioned_watts <= watts
+
+
+@given(lo=st.floats(50.0, 400.0), hi=st.floats(500.0, 8000.0),
+       n=st.integers(2, 6))
+@settings(max_examples=20, deadline=None)
+def test_prop_frontier_monotone_in_served_tps(lo, hi, n):
+    econ, fc = _module_synthetic()
+    budgets = [lo + (hi - lo) * i / (n - 1) for i in range(n)]
+    frontier = cost_of_capacity_frontier(econ, budgets, fc)
+    served = [p.served_tps for p in frontier]
+    assert served == sorted(served)
+
+
+@given(watts=st.floats(150.0, 3000.0))
+@settings(max_examples=10, deadline=None)
+def test_prop_same_inputs_byte_identical_json(watts):
+    econ, fc = _module_synthetic()
+    a = plan_fleet(econ, Budget.create(watts), fc)
+    b = plan_fleet(econ, Budget.create(watts), fc)
+    assert (json.dumps(a.to_json(), sort_keys=True)
+            == json.dumps(b.to_json(), sort_keys=True))
+    fa = cost_of_capacity_frontier(econ, (watts, watts * 2), fc)
+    fb = cost_of_capacity_frontier(econ, (watts, watts * 2), fc)
+    assert (json.dumps([p.to_json() for p in fa], sort_keys=True)
+            == json.dumps([p.to_json() for p in fb], sort_keys=True))
+
+
+def _module_synthetic():
+    """Fixture-free synthetic catalog for @given tests (the hypothesis
+    shim re-invokes the test body many times with one fixture pass)."""
+    big = _econ(_spec("big", axes=8, p_idle=20.0), 0,
+                prefill=(0.5, 1e-5), decode=(0.8, 4e-5))
+    eff = _econ(_spec("eff", axes=4, p_idle=10.0), 1,
+                prefill=(0.3, 2e-5), decode=(0.5, 8e-5))
+    lp = _econ(_spec("lp", axes=1, p_idle=2.0), 2,
+               prefill=(0.2, 8e-5), decode=(0.25, 2e-4))
+    fc = WorkloadForecast(
+        duration_s=10.0, requests=200, total_tokens=400_000,
+        mean_tps=40_000.0, peak_tps=90_000.0, prefill_frac=0.6,
+        tenants=(TenantForecast("chat", 120, 32, 16, 0.05),),
+        trace_digest="synthetic")
+    return [big, eff, lp], fc
+
+
+# ---------------------------------------------------------------------------
+# WorkloadForecast
+# ---------------------------------------------------------------------------
+
+
+class TestWorkloadForecast:
+    def test_from_spec_deterministic(self):
+        from repro.workload import TenantSpec, WorkloadSpec
+
+        spec = WorkloadSpec(
+            seed=3, duration_s=0.02, rate_rps=800.0, max_len=32,
+            tenants=(TenantSpec("chat", weight=1.0, prompt_median=6,
+                                prompt_max=12, new_tokens_median=4,
+                                new_tokens_max=8, slo_s=0.05),))
+        a = WorkloadForecast.from_spec(spec)
+        b = WorkloadForecast.from_spec(spec)
+        assert a == b
+        assert a.trace_digest == b.trace_digest
+        assert a.mean_tps == pytest.approx(
+            a.total_tokens / spec.duration_s)
+        assert a.peak_tps >= a.mean_tps
+        assert 0.0 < a.prefill_frac < 1.0
+        assert a.slo_tenants()[0].slo_s == 0.05
+
+    def test_from_trace_hand_counts(self):
+        from repro.runtime import Request
+        from repro.workload import TimedRequest
+
+        trace = [
+            TimedRequest(at_s=0.0, tenant="t", request=Request(
+                rid=0, prompt=[1, 2, 3], max_new_tokens=5)),
+            TimedRequest(at_s=9.0, tenant="t", request=Request(
+                rid=1, prompt=[1], max_new_tokens=1)),
+        ]
+        fc = WorkloadForecast.from_trace(trace, 10.0, peak_windows=10)
+        assert fc.total_tokens == 10  # (3+5) + (1+1)
+        assert fc.mean_tps == pytest.approx(1.0)
+        # peak window holds the 8-token request over a 1 s window
+        assert fc.peak_tps == pytest.approx(8.0)
+        assert fc.prefill_frac == pytest.approx(4 / 10)
+        t = fc.tenants[0]
+        assert t.requests == 2
+        assert t.prompt_median == 1  # lower median of [1, 3]
+        assert t.slo_s is None
+
+
+# ---------------------------------------------------------------------------
+# FleetRouter.provisioned + economics integration (real GA, small)
+# ---------------------------------------------------------------------------
+
+
+class TestRouterProvisioned:
+    def test_counts_expand_to_named_engines(self, rng_key):
+        import jax
+
+        from repro import models as M
+        from repro.configs import get_config, reduced
+        from repro.runtime import FleetRouter
+
+        cfg = reduced(get_config("llama3.2-3b"))
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        router = FleetRouter.provisioned(
+            cfg, params, {"hbm_lp": 2}, arch="llama3.2-3b",
+            slots=2, max_len=32, cache_path=None)
+        assert sorted(router.engines) == ["hbm_lp:0", "hbm_lp:1"]
+
+    def test_unknown_and_empty_counts_rejected(self, rng_key):
+        import jax
+
+        from repro import models as M
+        from repro.configs import get_config, reduced
+        from repro.runtime import FleetRouter
+
+        cfg = reduced(get_config("llama3.2-3b"))
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="unknown"):
+            FleetRouter.provisioned(cfg, params, {"nope": 1},
+                                    arch="llama3.2-3b", cache_path=None)
+        with pytest.raises(ValueError, match="empty"):
+            FleetRouter.provisioned(cfg, params, {"hbm_lp": 0},
+                                    arch="llama3.2-3b", cache_path=None)
+
+
+class TestDestinationEconomicsIntegration:
+    def test_sweep_prices_and_cached_resweep_is_free(self, tmp_path):
+        from repro.configs import DESTINATIONS
+        from repro.core.ga import GAConfig
+        from repro.provision import destination_economics
+        from repro.runtime.placement import DEFAULT_CATALOG
+
+        cache = str(tmp_path / "cache.jsonl")
+        specs = [DESTINATIONS["mxu_dense"], DESTINATIONS["hbm_lp"]]
+        ga = GAConfig(population=6, generations=3, seed=0)
+
+        first = destination_economics(
+            "llama3.2-3b", specs, shapes=DEFAULT_CATALOG, slots=2,
+            cache_path=cache, ga_config=ga)
+        assert not first.skipped
+        assert first.new_measurements > 0
+        for e in first.economics:
+            for kind in ("prefill", "decode"):
+                r = e.rate(kind)
+                assert r.energy_per_token_ws > 0.0
+                assert r.time_per_token_s > 0.0
+            assert e.capacity_tps > 0.0
+
+        again = destination_economics(
+            "llama3.2-3b", specs, shapes=DEFAULT_CATALOG, slots=2,
+            cache_path=cache, ga_config=ga)
+        assert again.new_measurements == 0  # everything came from disk
+        assert [(e.name, e.rates) for e in again.economics] \
+            == [(e.name, e.rates) for e in first.economics]

@@ -10,9 +10,12 @@ Two checks, stdlib only:
   ```python fenced block from `README.md`, write it to a temp file and run
   it with `PYTHONPATH=src`: the 10-line quickstart the README promises must
   actually execute.
+* **example smoke** (`--run-example PATH`) — run one of the `examples/`
+  scripts under the same environment: an example a doc points at must
+  actually execute.
 
-Exit code is nonzero on any broken link or a failing quickstart, so the
-docs job catches rot the moment a file moves.
+Exit code is nonzero on any broken link, failing quickstart or failing
+example, so the docs job catches rot the moment a file moves.
 """
 from __future__ import annotations
 
@@ -79,7 +82,36 @@ def run_quickstart(root: Path = ROOT) -> int:
     return proc.returncode
 
 
+def run_example(path: str, root: Path = ROOT) -> int:
+    """Run one examples/ script with the repo on PYTHONPATH (CPU JAX)."""
+    target = (root / path).resolve()
+    if not target.exists():
+        print(f"FAIL: example {path} does not exist", file=sys.stderr)
+        return 1
+    proc = subprocess.run(
+        [sys.executable, str(target)], cwd=root, text=True,
+        capture_output=True,
+        env={**__import__("os").environ,
+             "PYTHONPATH": str(root / "src"),
+             "JAX_PLATFORMS": "cpu"})
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr)
+    return proc.returncode
+
+
 def main() -> None:
+    if "--run-example" in sys.argv:
+        idx = sys.argv.index("--run-example")
+        if idx + 1 >= len(sys.argv):
+            raise SystemExit("--run-example needs a path "
+                             "(e.g. examples/provision_fleet.py)")
+        path = sys.argv[idx + 1]
+        code = run_example(path)
+        if code:
+            print(f"FAIL: {path} exited {code}", file=sys.stderr)
+        else:
+            print(f"{path} ran clean")
+        sys.exit(code)
     if "--run-quickstart" in sys.argv:
         code = run_quickstart()
         if code:
