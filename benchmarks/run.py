@@ -23,6 +23,9 @@ Sections:
   kernel_*        — kernel micro-benchmarks / TPU projections
   analysis_*      — static pre-screen pruning (screened vs unscreened
                     fleet sweep, bit-identical survivors) + lint surface
+  concurrency_*   — lockstep concurrent fleet executor: sequential-vs-
+                    concurrent ledger digest + step-phase speedup under
+                    an emulated device dwell (gate >= 1.5x, 3 engines)
   e2e_*           — end-to-end train/serve drivers (reduced configs)
 
 ``--json-dir DIR`` writes the unified BENCH_*.json artifact
@@ -46,7 +49,8 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 SECTIONS = ("himeno", "ga", "fleet", "serving", "traffic", "provision",
-            "router", "power", "kernel", "analysis", "e2e", "roofline")
+            "router", "power", "kernel", "analysis", "concurrency", "e2e",
+            "roofline")
 
 
 def main() -> None:
@@ -116,6 +120,9 @@ def main() -> None:
     if "analysis" in only:
         from benchmarks import analysis_bench
         rows += analysis_bench.run(json_path=art("analysis"))
+    if "concurrency" in only:
+        from benchmarks import concurrency_bench
+        rows += concurrency_bench.run(json_path=art("concurrency"))
 
     if "e2e" in only:
         # end-to-end drivers (reduced configs, CPU)

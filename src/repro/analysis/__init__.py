@@ -17,9 +17,16 @@ package is that stage for the jax_pallas port, in three layers:
   runs before measuring: statically-dominated / resource-infeasible /
   below-intensity-floor cells never reach the GA's verification
   environment, and the measurements avoided are reported.
+* :mod:`repro.analysis.concurrency` — the same read-before-run philosophy
+  turned on the runtime itself: an AST race/deadlock lint (shared-state map
+  from thread entry points, lock-discipline inference, lock-ordering
+  cycles, blocking-under-lock) that certifies the concurrent fleet
+  executor's single-writer contracts before the threads run.
 
-``tools/offload_lint.py`` is the CLI + CI gate over the lint layers;
-``benchmarks/analysis_bench.py`` pins the screen's pruning rate.
+``tools/offload_lint.py`` and ``tools/race_lint.py`` are the CLI + CI
+gates over the lint layers; ``benchmarks/analysis_bench.py`` pins the
+screen's pruning rate and ``benchmarks/concurrency_bench.py`` the
+executor's identity + speedup.
 """
 from repro.analysis.jaxpr_walk import (  # noqa: F401
     EqnStats, RegionReport, classify_primitive, trace_and_walk, walk_closed,
@@ -32,4 +39,8 @@ from repro.analysis.kernel_lint import (  # noqa: F401
 )
 from repro.analysis.screen import (  # noqa: F401
     CellStatics, ScreenPolicy, ScreenReport, screen_cells,
+)
+from repro.analysis.concurrency import (  # noqa: F401
+    ConcurrencyReport, SharedAttr, lint_runtime, lint_scan, scan_paths,
+    scan_source,
 )

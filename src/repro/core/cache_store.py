@@ -15,10 +15,15 @@ dataclasses, strings, ints and floats these keys are built from (no
 id-based reprs, no hash randomization exposure). Two processes therefore
 agree on every key, and a measurement made by one is a hit for the other.
 
-Durability model: appends happen under the cache lock, one line per entry,
-``flush`` per append. A crash can at worst truncate the final line;
-:meth:`CacheStore.load` skips undecodable lines, so a torn tail costs one
-re-measurement, never a corrupt cache.
+Durability model: each append is ONE ``os.write`` of the whole line to an
+``O_APPEND`` file descriptor — POSIX makes that atomic w.r.t. every
+concurrent reader and appender (no interleaved halves, no buffered tail
+sitting in userspace), so a :meth:`CacheStore.load` racing an append sees
+either the complete line or nothing. A crash can at worst truncate the
+final line; ``load`` skips undecodable lines, so a torn tail costs one
+re-measurement, never a corrupt cache. The store's lock only guards the
+lazy fd open/close and the compaction swap — never I/O (the race-lint's
+lock-blocking rule pins this).
 """
 from __future__ import annotations
 
@@ -81,7 +86,8 @@ class CacheStore:
     def __init__(self, path: str) -> None:
         self.path = path
         self._lock = threading.Lock()
-        self._fh = None
+        self._fd: Optional[int] = None  # O_APPEND fd, lazily opened
+        self._appends = 0  # lifetime appends; compaction races abort on it
         self.dropped_on_load = 0  # duplicate/torn lines seen by the last load
 
     def load(self, *, compact: bool = False
@@ -97,16 +103,22 @@ class CacheStore:
         across re-sweeps. The rewrite is write-temp-then-rename, so a crash
         mid-compaction leaves either the old or the new file, never a mix.
 
-        Compaction assumes no OTHER process is appending at the same
-        instant: a concurrent appender's lines written after this read are
-        dropped by the rename, and its open handle keeps writing to the
-        unlinked inode. That costs re-measurements, never correctness
-        (every record is reproducible), but callers that do run concurrent
+        Compaction vs a concurrent appender *in this process*: the rewrite
+        snapshots the lifetime append counter before reading and aborts the
+        swap (keeping the append-only file intact) if any append lands
+        in between — an appender can never lose a line to a racing
+        ``compact()``. A concurrent appender in ANOTHER process is still
+        invisible: its lines written after this read are dropped by the
+        rename, and its O_APPEND fd keeps writing to the unlinked inode.
+        That costs re-measurements, never correctness (every record is
+        reproducible), but deployments with concurrent cross-process
         writers should construct ``PersistentEvalCache(..., compact=False)``
         and compact offline.
         """
         entries: dict[str, tuple[str, Measurement]] = {}
         lines = 0
+        with self._lock:
+            appends_seen = self._appends
         if not os.path.exists(self.path):
             return entries
         with open(self.path, "r", encoding="utf-8") as fh:
@@ -123,43 +135,66 @@ class CacheStore:
                     continue  # torn/foreign line: skip, re-measure later
         self.dropped_on_load = lines - len(entries)
         if compact and self.dropped_on_load > 0:
-            self._rewrite(entries)
+            self._rewrite(entries, expected_appends=appends_seen)
         return entries
 
-    def _rewrite(self, entries: dict[str, tuple[str, Measurement]]) -> None:
+    def _rewrite(self, entries: dict[str, tuple[str, Measurement]], *,
+                 expected_appends: int) -> bool:
+        """Write-temp-then-rename swap; the tmp file is written OUTSIDE the
+        lock (blocking I/O under the store lock would stall every appender
+        for the whole rewrite) and the swap aborts if an append raced the
+        compaction — the append-only log is then left untouched."""
         tmp = self.path + ".compact.tmp"
+        with open(tmp, "w", encoding="utf-8") as fh:
+            for key, (cell, m) in entries.items():
+                fh.write(json.dumps({"key": key, "cell": cell,
+                                     "m": measurement_to_json(m)}) + "\n")
         with self._lock:
-            if self._fh is not None:  # reopen after the swap
-                self._fh.close()
-                self._fh = None
-            with open(tmp, "w", encoding="utf-8") as fh:
-                for key, (cell, m) in entries.items():
-                    fh.write(json.dumps({"key": key, "cell": cell,
-                                         "m": measurement_to_json(m)}) + "\n")
-            os.replace(tmp, self.path)
+            if self._appends != expected_appends:
+                swapped = False  # an appender raced us: keep the full log
+            else:
+                if self._fd is not None:  # reopen after the swap
+                    os.close(self._fd)
+                    self._fd = None
+                os.replace(tmp, self.path)
+                swapped = True
+        if not swapped:
+            os.unlink(tmp)
+            self.dropped_on_load = 0  # nothing was actually dropped
+        return swapped
 
     def compact(self) -> int:
         """Deduplicate the file in place; returns the lines dropped."""
         self.load(compact=True)
         return self.dropped_on_load
 
-    def append(self, key: str, cell: str, m: Measurement) -> None:
-        line = json.dumps({"key": key, "cell": cell,
-                           "m": measurement_to_json(m)})
+    def _append_fd(self) -> int:
+        """The lazily-opened O_APPEND descriptor (lock only guards open)."""
         with self._lock:
-            if self._fh is None:
+            if self._fd is None:
                 d = os.path.dirname(self.path)
                 if d:
                     os.makedirs(d, exist_ok=True)
-                self._fh = open(self.path, "a", encoding="utf-8")
-            self._fh.write(line + "\n")
-            self._fh.flush()
+                self._fd = os.open(self.path,
+                                   os.O_WRONLY | os.O_APPEND | os.O_CREAT,
+                                   0o644)
+            self._appends += 1
+            return self._fd
+
+    def append(self, key: str, cell: str, m: Measurement) -> None:
+        line = json.dumps({"key": key, "cell": cell,
+                           "m": measurement_to_json(m)})
+        # one os.write of the full line: POSIX O_APPEND makes it atomic
+        # w.r.t. concurrent load() readers and other appenders — and it
+        # happens outside the lock, so a slow disk never serializes the
+        # fleet behind the store
+        os.write(self._append_fd(), (line + "\n").encode("utf-8"))
 
     def close(self) -> None:
         with self._lock:
-            if self._fh is not None:
-                self._fh.close()
-                self._fh = None
+            if self._fd is not None:
+                os.close(self._fd)
+                self._fd = None
 
 
 # ---------------------------------------------------------------------------

@@ -70,13 +70,17 @@ class CacheStats:
 class EvalCache:
     """Thread-safe measurement cache shared across cells and GA runs.
 
-    Subclass hooks (both called with the cache lock held):
+    Subclass hooks:
 
     * ``_key`` canonicalizes a caller key before storage/lookup — a
       disk-backed cache maps arbitrary Hashables to stable strings so
       entries survive process boundaries (see core/cache_store.py).
     * ``_on_insert`` observes every first-time insert — the persistence
-      point; the base cache keeps everything in memory only.
+      point; the base cache keeps everything in memory only. It is called
+      AFTER the cache lock is released (the race-lint's blocking-under-lock
+      rule: a persistence hook doing disk I/O inside the hot cache lock
+      stalls every concurrent ``get``). The insert decision itself is made
+      under the lock, so the hook still fires exactly once per key.
     """
 
     def __init__(self) -> None:
@@ -115,10 +119,12 @@ class EvalCache:
     def put(self, key: Hashable, cell: str, m: Measurement) -> None:
         key = self._key(key)
         with self._lock:
-            if key not in self._data:  # first writer wins (values identical)
+            inserted = key not in self._data  # first writer wins
+            if inserted:
                 self._data[key] = (cell, m)
                 self._inserts += 1
-                self._on_insert(key, cell, m)
+        if inserted:
+            self._on_insert(key, cell, m)
 
     def stats(self) -> CacheStats:
         with self._lock:

@@ -1,3 +1,4 @@
+from repro.runtime.executor import FleetExecutor
 from repro.runtime.fault_tolerance import (
     ElasticOrchestrator, HeartbeatMonitor, StragglerDetector,
 )
@@ -12,6 +13,7 @@ from repro.runtime.router import (
 )
 
 __all__ = [
+    "FleetExecutor",
     "ElasticOrchestrator", "HeartbeatMonitor", "StragglerDetector",
     "EngineStats", "Placement", "Request", "ServingEngine",
     "PlacementController", "PlanReport", "TrafficMix", "static_placements",

@@ -364,12 +364,28 @@ class FleetRouter:
         return ok
 
     def run(self, max_waves: int = 64,
-            max_steps: Optional[int] = None) -> list[Request]:
+            max_steps: Optional[int] = None, *,
+            concurrent: bool = False,
+            max_workers: Optional[int] = None,
+            dwell_s: float = 0.0) -> list[Request]:
         """Drain every engine's queue; returns finished requests (engine
         order, completion order within an engine). Engines decode
         independently, so outputs are token-identical to running each engine
         alone on its assigned requests, and the modeled ledger is
-        independent of serving order."""
+        independent of serving order.
+
+        ``concurrent=True`` steps the engines on a thread pool in lockstep
+        ticks (:class:`~repro.runtime.executor.FleetExecutor`) —
+        token-identical and ledger-identical to the sequential drain (the
+        per-engine step schedules are unchanged; only the cross-engine
+        interleaving differs, which no engine can observe), pinned by
+        regression test. ``dwell_s`` adds an emulated per-step device
+        round-trip the concurrent drain overlaps across engines."""
+        if concurrent:
+            from repro.runtime.executor import FleetExecutor
+            ex = FleetExecutor(self._bindings, max_workers=max_workers,
+                               dwell_s=dwell_s)
+            return ex.run(max_waves=max_waves, max_steps=max_steps)
         done: list[Request] = []
         for b in self._bindings:
             done.extend(b.engine.run(max_waves=max_waves,

@@ -184,6 +184,17 @@ class ServingEngine:
       ``stats.rejected``, never queued).
     * ``"truncate"`` — keep the prompt head (reserving the token budget),
       mark the request ``truncated`` and serve it.
+
+    Thread-safety: single-writer. An engine instance is owned by exactly
+    one thread at any moment; nothing here is locked, by design — the hot
+    decode path must not pay lock traffic for its own ``stats``/``queue``.
+    The concurrent fleet executor (``runtime/executor.py``) upholds the
+    contract structurally: each lockstep tick submits at most one
+    ``stream_step`` per engine and the tick barrier (``Future.result``)
+    provides the happens-before between a worker's writes and the next
+    reader. ``analysis/concurrency.py`` verifies this marker against the
+    shared-state map — remove it and the race lint fails the build with
+    unguarded-shared-write findings on ``stats``/``queue``/``active``.
     """
 
     def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,

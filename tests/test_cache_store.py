@@ -170,3 +170,94 @@ def test_persistent_cache_compaction_opt_out(tmp_path):
     cache = PersistentEvalCache(path, compact=False)
     assert cache.compacted_lines == 0 and cache.preloaded == 1
     assert _count_lines(path) == 2  # file untouched
+
+
+# ---------------------------------------------------------------------------
+# Append atomicity vs concurrent readers (the cache_store concurrency fix,
+# pinned by the race lint: one O_APPEND os.write per line, no lock held
+# across I/O, compaction aborts instead of dropping a raced append)
+# ---------------------------------------------------------------------------
+
+
+def test_threaded_appends_are_atomic_for_concurrent_readers(tmp_path):
+    """Writer threads append while a reader thread load()s continuously:
+    every mid-flight load must see only whole lines (dropped_on_load == 0
+    — a torn or interleaved half-line would be skipped and counted), and
+    the final file carries every append exactly once."""
+    import threading
+
+    path = str(tmp_path / "cache.jsonl")
+    store = CacheStore(path)
+    writers, per_writer = 4, 50
+    stop = threading.Event()
+    torn = []
+
+    def write(w):
+        for i in range(per_writer):
+            store.append(f"w{w}-{i}", "cell",
+                         Measurement(float(w), float(i), detail={"pad": "x" * 200}))
+
+    def read():
+        reader = CacheStore(path)
+        while not stop.is_set():
+            reader.load()
+            if reader.dropped_on_load:
+                torn.append(reader.dropped_on_load)
+
+    threads = [threading.Thread(target=write, args=(w,))
+               for w in range(writers)]
+    observer = threading.Thread(target=read)
+    observer.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    observer.join()
+    store.close()
+    assert torn == []  # no load ever saw a torn/interleaved line
+    final = CacheStore(path)
+    entries = final.load()
+    assert len(entries) == writers * per_writer
+    assert final.dropped_on_load == 0
+
+
+def test_compaction_aborts_when_an_append_races(tmp_path):
+    """A concurrent append between compaction's read and its swap must not
+    be dropped: the rewrite aborts, keeping the full append-only log."""
+    path = str(tmp_path / "cache.jsonl")
+    store = CacheStore(path)
+    store.append("dup", "c", Measurement(1.0, 2.0))
+    store.append("dup", "c", Measurement(1.0, 2.0))
+    entries = store.load()
+    # an appender lands after the load snapshot, before the swap
+    store.append("late", "c", Measurement(3.0, 4.0))
+    swapped = store._rewrite(entries, expected_appends=2)
+    assert not swapped
+    assert store.dropped_on_load == 0  # nothing was actually dropped
+    store.close()
+    reloaded = CacheStore(path).load()
+    assert set(reloaded) == {"dup", "late"}  # the raced append survived
+    assert not os.path.exists(path + ".compact.tmp")  # tmp cleaned up
+
+
+def test_compaction_swaps_when_no_append_races(tmp_path):
+    path = str(tmp_path / "cache.jsonl")
+    store = CacheStore(path)
+    store.append("dup", "c", Measurement(1.0, 2.0))
+    store.append("dup", "c", Measurement(1.0, 2.0))
+    assert store.compact() == 1
+    store.close()
+    final = CacheStore(path)
+    assert final.load() == {"dup": ("c", Measurement(1.0, 2.0))}
+    assert final.dropped_on_load == 0
+
+
+def test_append_reopens_after_close(tmp_path):
+    path = str(tmp_path / "cache.jsonl")
+    store = CacheStore(path)
+    store.append("a", "c", Measurement(1.0, 2.0))
+    store.close()
+    store.append("b", "c", Measurement(3.0, 4.0))
+    store.close()
+    assert set(CacheStore(path).load()) == {"a", "b"}

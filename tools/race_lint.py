@@ -1,0 +1,121 @@
+"""Race-lint CLI: concurrency-soundness gate for the runtime.
+
+Runs :mod:`repro.analysis.concurrency` over ``src/repro`` — shared-state
+map from the thread entry points, lock-discipline inference, unguarded
+shared writes, lock-ordering cycles and blocking-under-lock — then gates
+against a checked-in baseline exactly like ``tools/offload_lint.py``:
+
+* findings whose stable ID is **not** in the baseline are *new* → exit 1
+  (the CI ``race-lint`` job fails the commit);
+* baselined findings are reported but tolerated (accepted debt);
+* baseline entries that no longer fire are reported as fixed (prune them
+  with ``--update-baseline``).
+
+The checked-in baseline is **empty**: every real finding the lint raised
+against the runtime was fixed (and regression-pinned in
+``tests/test_concurrency.py``) rather than accepted, so any finding this
+CLI prints is new debt.
+
+Usage::
+
+    PYTHONPATH=src python tools/race_lint.py              # human output
+    PYTHONPATH=src python tools/race_lint.py --json out.json
+    PYTHONPATH=src python tools/race_lint.py --update-baseline
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+DEFAULT_BASELINE = ROOT / "tools" / "race_lint_baseline.json"
+
+
+def collect_report():
+    """Run the concurrency lint over the runtime; returns the report."""
+    from repro.analysis.concurrency import lint_runtime
+
+    return lint_runtime()
+
+
+def load_baseline(path: Path) -> set[str]:
+    if not path.exists():
+        return set()
+    data = json.loads(path.read_text())
+    return set(data.get("accepted", []))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", default=None,
+                    help="write the machine-readable report here")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="accepted-findings file (default: %(default)s)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to exactly the current "
+                         "findings and exit 0")
+    args = ap.parse_args(argv)
+
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    report = collect_report()
+    findings = report.findings
+    baseline_path = Path(args.baseline)
+    accepted = load_baseline(baseline_path)
+
+    fids = [f.fid for f in findings]
+    new = [f for f in findings if f.fid not in accepted]
+    fixed = sorted(accepted - set(fids))
+
+    if args.update_baseline:
+        baseline_path.write_text(json.dumps(
+            {"version": 1, "accepted": sorted(set(fids))}, indent=2) + "\n")
+        print("baseline updated: %d accepted finding(s) -> %s"
+              % (len(set(fids)), baseline_path))
+        return 0
+
+    counts: dict[str, int] = {}
+    for f in findings:
+        counts[f.severity] = counts.get(f.severity, 0) + 1
+
+    if args.json:
+        Path(args.json).write_text(json.dumps({
+            **report.to_json(),
+            "counts": counts,
+            "new": [f.fid for f in new],
+            "fixed_baseline_entries": fixed,
+            "baseline": str(baseline_path),
+        }, indent=2) + "\n")
+
+    for f in findings:
+        marker = "NEW " if f.fid in {n.fid for n in new} else ""
+        print("%s%-5s %s — %s" % (marker, f.severity.upper(), f.fid,
+                                  f.message))
+    for fid in fixed:
+        print("FIXED (prune from baseline): %s" % fid)
+    print("race-lint: %d shared attr(s) across %d thread entr%s; "
+          "%d finding(s) (%s), %d new, %d baselined, "
+          "%d fixed baseline entr%s"
+          % (len(report.shared), len(report.entries),
+             "y" if len(report.entries) == 1 else "ies",
+             len(findings),
+             ", ".join("%d %s" % (n, s) for s, n in sorted(counts.items()))
+             or "none",
+             len(new), len(findings) - len(new), len(fixed),
+             "y" if len(fixed) == 1 else "ies"))
+    for cls, disc in sorted(report.disciplines.items()):
+        print("  discipline %-28s %s" % (cls, disc))
+    if new:
+        print("race-lint: FAIL — new findings above are not in the "
+              "baseline (%s)" % baseline_path)
+        return 1
+    print("race-lint: clean against baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
