@@ -26,6 +26,9 @@ Sections:
   concurrency_*   — lockstep concurrent fleet executor: sequential-vs-
                     concurrent ledger digest + step-phase speedup under
                     an emulated device dwell (gate >= 1.5x, 3 engines)
+  migration_*     — saturation spike: mid-flight live migration vs
+                    queue-drain-only rebalancing (deadline violations +
+                    full-bill Watt·s/1k incl. transfer cost; resim gate)
   e2e_*           — end-to-end train/serve drivers (reduced configs)
 
 ``--json-dir DIR`` writes the unified BENCH_*.json artifact
@@ -49,8 +52,8 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 SECTIONS = ("himeno", "ga", "fleet", "serving", "traffic", "provision",
-            "router", "power", "kernel", "analysis", "concurrency", "e2e",
-            "roofline")
+            "router", "power", "kernel", "analysis", "concurrency",
+            "migration", "e2e", "roofline")
 
 
 def main() -> None:
@@ -123,6 +126,9 @@ def main() -> None:
     if "concurrency" in only:
         from benchmarks import concurrency_bench
         rows += concurrency_bench.run(json_path=art("concurrency"))
+    if "migration" in only:
+        from benchmarks import migration_bench
+        rows += migration_bench.run(json_path=art("migration"))
 
     if "e2e" in only:
         # end-to-end drivers (reduced configs, CPU)

@@ -152,3 +152,23 @@ class Checkpointer:
 def _digest(leaves_manifest: dict) -> str:
     blob = json.dumps(leaves_manifest, sort_keys=True).encode()
     return hashlib.sha256(blob).hexdigest()[:16]
+
+
+def resize_axis(arr: np.ndarray, axis: int, new_len: int) -> np.ndarray:
+    """Zero-pad or truncate ``arr`` along ``axis`` to ``new_len`` — the leaf
+    reshaping primitive elastic restore implies and mid-flight slot
+    migration (``runtime/migration.py``) reuses to move KV-cache rows
+    between destinations whose ``max_len`` disagree. Truncation drops the
+    TAIL; callers are responsible for only truncating rows the consumer can
+    never address (the decode path's per-row causal mask makes rows at
+    index >= pos unreachable)."""
+    cur = arr.shape[axis]
+    if new_len == cur:
+        return arr
+    if new_len < cur:
+        sl = [slice(None)] * arr.ndim
+        sl[axis] = slice(0, new_len)
+        return arr[tuple(sl)]
+    pad = [(0, 0)] * arr.ndim
+    pad[axis] = (0, new_len - cur)
+    return np.pad(arr, pad)

@@ -16,6 +16,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import attention as attn
@@ -463,6 +464,63 @@ def reset_decode_slots(cfg: ArchConfig, state: dict, reset_mask) -> dict:
                                    jnp.zeros_like(state["cross_k"]))
         new_state["cross_v"] = sel(state["cross_v"],
                                    jnp.zeros_like(state["cross_v"]))
+    return new_state
+
+
+def decode_state_cache_keys(cfg: ArchConfig) -> tuple[str, ...]:
+    """State keys whose leaves carry the **cache length** axis (``cache_len``
+    at init; axis 2 of the stacked ``(layers, batch, len, ...)`` leaf, axis 1
+    after :func:`extract_decode_slot` drops the batch axis). These are the
+    leaves mid-flight migration must pad/truncate when source and target
+    engines disagree on ``max_len``; recurrent leaves (RWKV/Mamba) are
+    length-free and move unchanged."""
+    if cfg.family == "ssm":
+        return ()
+    if cfg.family == "hybrid":
+        return ("attn",)
+    if cfg.is_encdec:
+        return ("self", "cross_k", "cross_v")
+    return ("kv",)
+
+
+def extract_decode_slot(cfg: ArchConfig, state: dict, slot: int
+                        ) -> tuple[dict, int]:
+    """Host-side copy of ONE slot's decode state: ``(leaves, pos)``.
+
+    Every stacked state leaf carries batch at axis 1 (the layout
+    :func:`reset_decode_slots` relies on), so one slot's share is the
+    ``[:, slot]`` slice of each non-``pos`` leaf, pulled to host numpy —
+    mesh-agnostic by construction (``np.asarray`` gathers a sharded array),
+    which is what lets a :class:`~repro.runtime.migration.SlotSnapshot`
+    cross destinations with different meshes/layouts."""
+    leaves = {
+        key: jax.tree.map(lambda v: np.asarray(v[:, slot]), val)
+        for key, val in state.items() if key != "pos"
+    }
+    pos = int(np.asarray(state["pos"])[slot])
+    return leaves, pos
+
+
+def restore_decode_slot(cfg: ArchConfig, state: dict, slot: int,
+                        leaves: dict, pos: int) -> dict:
+    """Masked single-slot **write** — the restore-side dual of
+    :func:`reset_decode_slots`: overwrite slot ``slot``'s share of every
+    state leaf with ``leaves`` (an :func:`extract_decode_slot` payload,
+    already resized to this state's cache length) and pin its position
+    stream at ``pos``, WITHOUT touching the other slots. The neighbors keep
+    decoding through a migration exactly as they keep decoding through an
+    admission reset."""
+    batch = state["pos"].shape[0]
+    new_state = dict(state)
+    new_state["pos"] = jnp.broadcast_to(
+        jnp.asarray(state["pos"], jnp.int32), (batch,)).at[slot].set(pos)
+    for key, val in state.items():
+        if key == "pos":
+            continue
+        new_state[key] = jax.tree.map(
+            lambda cur, leaf: cur.at[:, slot].set(
+                jnp.asarray(leaf).astype(cur.dtype)),
+            val, leaves[key])
     return new_state
 
 

@@ -2,6 +2,9 @@ from repro.runtime.executor import FleetExecutor
 from repro.runtime.fault_tolerance import (
     ElasticOrchestrator, HeartbeatMonitor, StragglerDetector,
 )
+from repro.runtime.migration import (
+    MigrationError, SlotSnapshot, migrate, restore_slot, snapshot_slot,
+)
 from repro.runtime.serving import (
     EngineStats, Placement, Request, ServingEngine,
 )
@@ -15,6 +18,8 @@ from repro.runtime.router import (
 __all__ = [
     "FleetExecutor",
     "ElasticOrchestrator", "HeartbeatMonitor", "StragglerDetector",
+    "MigrationError", "SlotSnapshot", "migrate", "restore_slot",
+    "snapshot_slot",
     "EngineStats", "Placement", "Request", "ServingEngine",
     "PlacementController", "PlanReport", "TrafficMix", "static_placements",
     "EngineBinding", "FleetRouter", "RouterPlanReport",

@@ -57,7 +57,8 @@ class FleetExecutor:
 
     def __init__(self, bindings: Sequence, *,
                  max_workers: Optional[int] = None,
-                 dwell_s: float = 0.0) -> None:
+                 dwell_s: float = 0.0,
+                 on_tick=None) -> None:
         if not bindings:
             raise ValueError("need at least one engine binding")
         if dwell_s < 0.0:
@@ -65,6 +66,14 @@ class FleetExecutor:
         self.bindings = list(bindings)
         self.max_workers = max_workers or len(self.bindings)
         self.dwell_s = dwell_s
+        # coordinator-thread hook, called with the tick index after every
+        # barrier — the single moment no worker holds any engine, so
+        # cross-engine surgery (mid-flight migration, live rebalance) is
+        # race-free by schedule: the barrier orders the workers' writes
+        # before the hook's reads, and the hook's writes before the next
+        # tick's submissions. Engines the hook hands new work (a restored
+        # slot, a woken target) re-enter the live set on the next tick.
+        self.on_tick = on_tick
         self.ticks = 0  # lockstep barriers crossed by the last run()
 
     def _step_engine(self, binding) -> Optional[list]:
@@ -118,6 +127,22 @@ class FleetExecutor:
                             if budgets[b.name] > 0:
                                 nxt.append(b)
                         live = nxt
+                        if self.on_tick is not None:
+                            self.on_tick(self.ticks)
+                            # revival: the hook may have migrated a slot
+                            # into (or woken) an engine that had idled out
+                            # of the live set — an awake engine with slot
+                            # or queue work and budget re-enters the
+                            # lockstep. Without a hook nothing can touch a
+                            # dropped engine, so this is unreachable and
+                            # the schedule is byte-identical to PR 9's.
+                            in_live = {b.name for b in live}
+                            for b in stream:
+                                if (b.name not in in_live
+                                        and budgets[b.name] > 0
+                                        and b.engine.power_state == "awake"
+                                        and b.engine.stream_busy()):
+                                    live.append(b)
                 finally:
                     for b in stream:
                         b.engine.stream_close()

@@ -151,6 +151,7 @@ class FleetRouter:
         min_awake: int = 1,
         headroom: float = 1.25,
         sleep_after_s: float = 0.0,
+        saturation_factor: float = 4.0,
     ) -> None:
         if not destinations:
             raise ValueError("need at least one destination")
@@ -168,6 +169,7 @@ class FleetRouter:
         self.min_awake = max(int(min_awake), 1)
         self.headroom = headroom
         self.sleep_after_s = sleep_after_s
+        self.saturation_factor = saturation_factor
         self.ga_config = ga_config or GAConfig(population=10, generations=8)
         if eval_engine is None:
             if cache_path:
@@ -367,7 +369,9 @@ class FleetRouter:
             max_steps: Optional[int] = None, *,
             concurrent: bool = False,
             max_workers: Optional[int] = None,
-            dwell_s: float = 0.0) -> list[Request]:
+            dwell_s: float = 0.0,
+            on_tick=None,
+            rebalance_every: int = 0) -> list[Request]:
         """Drain every engine's queue; returns finished requests (engine
         order, completion order within an engine). Engines decode
         independently, so outputs are token-identical to running each engine
@@ -380,11 +384,25 @@ class FleetRouter:
         per-engine step schedules are unchanged; only the cross-engine
         interleaving differs, which no engine can observe), pinned by
         regression test. ``dwell_s`` adds an emulated per-step device
-        round-trip the concurrent drain overlaps across engines."""
+        round-trip the concurrent drain overlaps across engines.
+
+        ``on_tick`` (concurrent only) runs on the coordinator thread after
+        every tick barrier — the single moment no worker holds any engine,
+        which is where mid-flight migrations are safe; ``rebalance_every=k``
+        installs the canonical hook: every k ticks, escalate
+        :meth:`rebalance` to live load-shedding off saturated engines."""
         if concurrent:
             from repro.runtime.executor import FleetExecutor
+            if rebalance_every > 0:
+                user_tick = on_tick
+
+                def on_tick(tick, _user=user_tick):  # noqa: F811
+                    if tick % rebalance_every == 0:
+                        self.rebalance(live=True, include_saturated=True)
+                    if _user is not None:
+                        _user(tick)
             ex = FleetExecutor(self._bindings, max_workers=max_workers,
-                               dwell_s=dwell_s)
+                               dwell_s=dwell_s, on_tick=on_tick)
             return ex.run(max_waves=max_waves, max_steps=max_steps)
         done: list[Request] = []
         for b in self._bindings:
@@ -629,24 +647,125 @@ class FleetRouter:
             moved += 1
         return moved
 
-    def rebalance(self, dominated: Optional[Sequence[str]] = None
+    def saturated(self) -> list[str]:
+        """Engines whose queued backlog exceeds ``saturation_factor`` x
+        their slot count — the spike signal live rebalancing sheds from."""
+        return [b.name for b in self._bindings
+                if len(b.engine.queue)
+                > self.saturation_factor * b.engine.slots]
+
+    def migrate_slot(self, source: str, slot: int, target: str,
+                     now: Optional[float] = None) -> int:
+        """Move ONE admitted (in-flight) request: snapshot ``slot`` off
+        engine ``source`` and restore it into a free slot of ``target``
+        (:mod:`repro.runtime.migration` — transactional: a refusal leaves
+        the source untouched). Tokens decoded after the move bill under the
+        target's placement epoch; the transfer bills a separate
+        ``migration_ws`` ledger line on the target; no token bills twice.
+        Returns the target slot index."""
+        from repro.runtime.migration import migrate
+        src = next(b for b in self._bindings if b.name == source)
+        dst = next(b for b in self._bindings if b.name == target)
+        req, _ = self._slot_request(src, slot)
+        out = migrate(src.engine, dst.engine, slot, now=now)
+        self.assignments[req.rid] = dst.name
+        return out
+
+    def _slot_request(self, binding: EngineBinding, slot: int):
+        from repro.runtime import migration
+        sess_kind, s = migration._session(binding.engine)
+        reqs = s["slot_req"] if sess_kind == "stream" else s["reqs"]
+        if slot >= len(reqs) or reqs[slot] is None:
+            from repro.runtime.migration import MigrationError
+            raise MigrationError(
+                f"slot {slot} of {binding.name!r} holds no request")
+        return reqs[slot], sess_kind
+
+    def _live_shed(self, source: EngineBinding,
+                   survivors: Sequence[EngineBinding],
+                   now: Optional[float]) -> int:
+        """Migrate ``source``'s admitted slots (ascending slot order) onto
+        awake survivors with free slots, chosen by the routing policy's
+        cost (energy: marginal modeled Watt·s; latency: modeled ETA;
+        catalog order breaks ties). Stops at the first slot no survivor
+        can take — refusals are deterministic, not silent drops."""
+        from repro.runtime import migration
+        moved = 0
+        try:
+            sess_kind, s = migration._session(source.engine)
+        except migration.MigrationError:
+            return 0
+        reqs = s["slot_req"] if sess_kind == "stream" else s["reqs"]
+        for slot in range(len(reqs)):
+            req = reqs[slot]
+            if req is None or (sess_kind == "wave"
+                               and not s["active"][slot]):
+                continue
+            cands = []
+            for b in survivors:
+                if now is not None:
+                    b.engine.check_awake(now)
+                if b.engine.power_state != "awake":
+                    continue
+                if not migration.free_slots(b.engine):
+                    continue
+                cands.append(b)
+            if not cands:
+                return moved
+            if self.policy == "latency":
+                target = min(cands, key=lambda b: (self.eta_s(b, req, now),
+                                                   b.order))
+            else:
+                target = min(cands,
+                             key=lambda b: (self.marginal_energy_ws(
+                                 b.engine, req), b.order))
+            try:
+                migration.migrate(source.engine, target.engine, slot,
+                                  now=now)
+            except migration.MigrationError:
+                continue  # geometry refusal: try the next slot
+            self.assignments[req.rid] = target.name
+            moved += 1
+        return moved
+
+    def rebalance(self, dominated: Optional[Sequence[str]] = None, *,
+                  live: bool = False, now: Optional[float] = None,
+                  include_saturated: Optional[bool] = None
                   ) -> dict[str, int]:
-        """Drain queued requests off engines whose destination is dominated
-        on the fleet frontier (default: the last plan's verdict). Returns
-        {engine name: requests moved}."""
+        """Shed load off engines whose destination is dominated on the
+        fleet frontier (default: the last plan's verdict) and — when
+        ``include_saturated`` (default: follows ``live``) — off engines
+        whose queue exceeds the saturation threshold.
+
+        The base move is the PR 5 queue-drain (queued, never-admitted
+        requests re-route through the policy). ``live=True`` escalates to
+        **mid-flight migration of admitted requests**: occupied slots move
+        to awake survivors with free capacity through
+        :meth:`migrate_slot`'s billing contract (post-move tokens bill
+        under the target's epoch, the transfer bills ``migration_ws``, no
+        token twice). Returns {engine name: requests moved} counting both
+        kinds."""
         if dominated is None:
             dominated = self.history[-1].dominated if self.history else []
         dominated = set(dominated)
-        if not dominated:
+        if include_saturated is None:
+            include_saturated = live
+        source_names = {b.name for b in self._bindings
+                        if b.dest.name in dominated}
+        if include_saturated:
+            source_names |= set(self.saturated())
+        if not source_names:
             return {}
+        sources = [b for b in self._bindings if b.name in source_names]
         survivors = [b for b in self._bindings
-                     if b.dest.name not in dominated]
+                     if b.name not in source_names]
         if not survivors:
             return {}  # refusing to drain the whole fleet
         moved: dict[str, int] = {}
-        for b in self._bindings:
-            if b.dest.name in dominated:
-                n = self.drain(b.name, survivors)
-                if n:
-                    moved[b.name] = n
+        for b in sources:
+            n = self.drain(b.name, survivors)
+            if live:
+                n += self._live_shed(b, survivors, now)
+            if n:
+                moved[b.name] = n
         return moved

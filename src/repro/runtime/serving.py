@@ -130,6 +130,14 @@ class EngineStats:
     wakes: int = 0  # asleep/floor -> awake transitions
     sleeps: int = 0  # awake/floor -> asleep transitions
     reconfigurations: int = 0
+    migrations_in: int = 0  # live slots restored into this engine
+    migrations_out: int = 0  # live slots snapshotted away mid-flight
+    # transfer-cost ledger line: Watt·s billed for moving slot snapshots
+    # INTO this engine (snapshot bytes x the link's Ws/MiB). Kept separate
+    # from energy_ws so serving energy stays attributable to tokens — a
+    # migrated request's tokens bill once (pre-move under the source epoch,
+    # post-move under the target's) and the move itself bills here.
+    migration_ws: float = 0.0
 
     @property
     def occupancy(self) -> float:
@@ -143,8 +151,9 @@ class EngineStats:
 
     @property
     def total_ws(self) -> float:
-        """Serving energy plus static idle energy — the full fleet bill."""
-        return self.energy_ws + self.idle_ws
+        """Serving energy plus static idle energy plus migration transfer
+        cost — the full fleet bill."""
+        return self.energy_ws + self.idle_ws + self.migration_ws
 
     def snapshot(self) -> "EngineStats":
         return EngineStats(**{f: getattr(self, f)
@@ -236,6 +245,7 @@ class ServingEngine:
         self.floor_wake_s = 0.0  # floor -> awake latency (near-instant)
         self._awake_at = 0.0  # when a "waking" engine finishes waking
         self._stream: Optional[dict] = None  # open stream session state
+        self._wave: Optional[dict] = None  # open wave session state
         self.last_step_s = 0.0  # modeled duration of the last stream step
         # Donating the state matches launch/steps.build_serve_step: the old
         # KV/recurrent buffers are dead after every call site (both the
@@ -469,15 +479,20 @@ class ServingEngine:
             self.stats.length_capped += 1
         self.active.remove(req)
 
-    def _finish_reason(self, req: Request, tok: int, next_pos: int
-                       ) -> Optional[str]:
-        """eos wins over max_new_tokens wins over length_cap."""
+    def _finish_reason(self, req: Request, tok: int, next_pos: int,
+                       cap: Optional[int] = None) -> Optional[str]:
+        """eos wins over max_new_tokens wins over length_cap. ``cap`` is the
+        slot's effective length cap — ``max_len`` of the engine that
+        ADMITTED the request, carried through mid-flight migration so a
+        request moved to a roomier destination still length-caps exactly
+        where its never-migrated baseline would (the differential
+        serving-equivalence contract)."""
         if req.eos_id is not None and tok == req.eos_id:
             return "eos"
         if len(req.output) >= req.max_new_tokens:
             return "max_new_tokens"
-        if next_pos + 1 >= self.max_len:  # no room for another step
-            return "length_cap"
+        if next_pos + 1 >= (self.max_len if cap is None else cap):
+            return "length_cap"  # no room for another step
         return None
 
     # ------------------------------------------------------------------
@@ -496,6 +511,9 @@ class ServingEngine:
             # placement epoch captured at admission: tokens of this slot are
             # costed under these rates no matter what reconfigure does later
             "epoch": [{} for _ in range(self.slots)],
+            # effective length cap per slot: max_len of the ADMITTING engine,
+            # preserved by mid-flight migration (see _finish_reason)
+            "cap": [self.max_len] * self.slots,
         }
 
     def stream_busy(self) -> bool:
@@ -519,6 +537,7 @@ class ServingEngine:
             return None
         s = self._stream
         slot_req, cursors, slot_epoch = s["slot_req"], s["cursors"], s["epoch"]
+        caps = s["cap"]
         # admission: every free slot takes the next queued request — a
         # slot freed on step t serves its new request on step t+1
         newly = []
@@ -528,6 +547,7 @@ class ServingEngine:
                 slot_req[i] = req
                 cursors[i] = 0
                 slot_epoch[i] = dict(self.placements)
+                caps[i] = self.max_len
                 self._admit(req)
                 newly.append(i)
         if not any(r is not None for r in slot_req):
@@ -577,7 +597,7 @@ class ServingEngine:
             if c >= len(req.prompt) - 1:  # this step emitted a token
                 tok = int(nxt[i])
                 req.output.append(tok)
-                reason = self._finish_reason(req, tok, cursors[i])
+                reason = self._finish_reason(req, tok, cursors[i], caps[i])
                 if reason is not None:
                     self._finish(req, reason)
                     done.append(req)
@@ -601,6 +621,30 @@ class ServingEngine:
                 self.active.remove(req)
         self._stream = None
 
+    # ------------------------------------------------------------------
+    # Mid-flight migration (runtime/migration.py holds the machinery)
+    # ------------------------------------------------------------------
+    def snapshot_slot(self, slot: int):
+        """Pure host-side :class:`~repro.runtime.migration.SlotSnapshot` of
+        one occupied slot of the open session (stream or wave). Read-only:
+        detaching the slot is the transactional move's job
+        (:func:`repro.runtime.migration.migrate`)."""
+        from repro.runtime import migration
+        return migration.snapshot_slot(self, slot)
+
+    def restore_slot(self, snap, *, now: Optional[float] = None,
+                     transfer_ws_per_mib: Optional[float] = None) -> int:
+        """Restore a :class:`~repro.runtime.migration.SlotSnapshot` into a
+        free slot of this engine's open session; returns the slot index.
+        Refuses deterministically (``MigrationError``) when the geometry
+        cannot hold the snapshot or this engine is not awake — with a
+        clock, a wake is initiated (wake-charged) first."""
+        from repro.runtime import migration
+        kwargs = {}
+        if transfer_ws_per_mib is not None:
+            kwargs["transfer_ws_per_mib"] = transfer_ws_per_mib
+        return migration.restore_slot(self, snap, now=now, **kwargs)
+
     def _run_stream(self, max_steps: int) -> list[Request]:
         self.stream_open()
         done: list[Request] = []
@@ -615,61 +659,103 @@ class ServingEngine:
         return done
 
     # ------------------------------------------------------------------
-    # Wave scheduler (legacy, scheduler="wave")
+    # Wave scheduler (legacy, scheduler="wave"; session API mirrors the
+    # stream scheduler's so mid-flight migration works under both)
     # ------------------------------------------------------------------
-    def _run_wave(self, wave: list[Request]) -> None:
-        state = T.init_decode_state(self.cfg, self.slots, self.max_len)
-        cursors = [0] * len(wave)
-        active = [True] * len(wave)
+    def wave_open(self, wave: list[Request]) -> None:
+        """Start a wave session over up to ``slots`` requests: one fresh
+        decode state plus per-slot bookkeeping held on the engine, so a
+        test or migration driver can step the wave incrementally (the
+        legacy closed loop, ``_run_wave``, is now a thin driver over this).
+        Epoch and cap are tracked per slot — identical for every admitted
+        member (the wave rule), but a slot restored by mid-flight migration
+        carries its own."""
+        if self._wave is not None:
+            raise RuntimeError("wave session already open")
         self.stats.waves += 1
         self._in_wave = True
-        epoch = dict(self.placements)  # the epoch that admitted this wave
+        self._wave = {
+            "state": T.init_decode_state(self.cfg, self.slots, self.max_len),
+            "reqs": list(wave),
+            "cursors": [0] * len(wave),
+            "active": [True] * len(wave),
+            "epoch": [dict(self.placements) for _ in wave],
+            "cap": [self.max_len] * len(wave),
+            "steps": 0,
+        }
         for req in wave:
             self._admit(req)
-        try:
-            for _ in range(self.max_len):
-                if not any(active):
-                    break
-                tokens = np.zeros((self.slots,), np.int32)
-                for i, req in enumerate(wave):
-                    if not active[i]:
-                        continue
-                    c = cursors[i]
-                    tokens[i] = (req.prompt[c] if c < len(req.prompt)
-                                 else req.output[-1])
-                logits, state = self._step(self.params, state,
-                                           jnp.asarray(tokens))
-                self.stats.steps += 1
-                self.stats.slot_steps += self.slots
-                self.stats.active_slot_steps += sum(active)
-                nxt = np.asarray(jnp.argmax(logits, axis=-1))
-                for i, req in enumerate(wave):
-                    if not active[i]:
-                        continue
-                    c = cursors[i]
-                    cursors[i] += 1
-                    # prefill/decode attribution: the step consuming the
-                    # last prompt token is prefill (see _run_stream)
-                    kind = "prefill" if c < len(req.prompt) else "decode"
-                    self.stats.prefill_tokens += kind == "prefill"
-                    self.stats.decode_tokens += kind == "decode"
-                    self.stats.energy_ws += self._token_energy(kind, epoch)
-                    if c >= len(req.prompt) - 1:
-                        tok = int(nxt[i])
-                        req.output.append(tok)
-                        reason = self._finish_reason(req, tok, cursors[i])
-                        if reason is not None:
-                            self._finish(req, reason)
-                            active[i] = False
-        finally:
-            self._in_wave = False
-        # Defensive: the submit guard makes wave exhaustion unreachable, but
-        # if it ever happens the request is marked, not laundered as done.
-        for i, req in enumerate(wave):
-            if active[i]:
+
+    def wave_step(self) -> Optional[list[Request]]:
+        """One decode step of the open wave session. Returns the requests
+        finished by this step, or None when the wave is drained (or its
+        ``max_len`` step bound — unreachable under the submit guard — is
+        exhausted)."""
+        if self._wave is None:
+            raise RuntimeError("no open wave session")
+        w = self._wave
+        reqs, cursors, active = w["reqs"], w["cursors"], w["active"]
+        if not any(active) or w["steps"] >= self.max_len:
+            return None
+        tokens = np.zeros((self.slots,), np.int32)
+        for i, req in enumerate(reqs):
+            if not active[i]:
+                continue
+            c = cursors[i]
+            tokens[i] = (req.prompt[c] if c < len(req.prompt)
+                         else req.output[-1])
+        logits, w["state"] = self._step(self.params, w["state"],
+                                        jnp.asarray(tokens))
+        w["steps"] += 1
+        self.stats.steps += 1
+        self.stats.slot_steps += self.slots
+        self.stats.active_slot_steps += sum(active)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        done: list[Request] = []
+        for i, req in enumerate(reqs):
+            if not active[i]:
+                continue
+            c = cursors[i]
+            cursors[i] += 1
+            # prefill/decode attribution: the step consuming the
+            # last prompt token is prefill (see _run_stream)
+            kind = "prefill" if c < len(req.prompt) else "decode"
+            self.stats.prefill_tokens += kind == "prefill"
+            self.stats.decode_tokens += kind == "decode"
+            self.stats.energy_ws += self._token_energy(kind, w["epoch"][i])
+            if c >= len(req.prompt) - 1:
+                tok = int(nxt[i])
+                req.output.append(tok)
+                reason = self._finish_reason(req, tok, cursors[i],
+                                             w["cap"][i])
+                if reason is not None:
+                    self._finish(req, reason)
+                    done.append(req)
+                    active[i] = False
+        return done
+
+    def wave_close(self) -> None:
+        """End the wave session. Still-active slots are marked
+        ``incomplete`` (the submit guard makes wave exhaustion unreachable,
+        but if it ever happens the request is marked, not laundered as
+        done)."""
+        if self._wave is None:
+            return
+        for i, req in enumerate(self._wave["reqs"]):
+            if self._wave["active"][i]:
                 req.status = "incomplete"
                 self.stats.incomplete += 1
                 self.active.remove(req)
+        self._wave = None
+        self._in_wave = False
+
+    def _run_wave(self, wave: list[Request]) -> None:
+        self.wave_open(wave)
+        try:
+            while self.wave_step() is not None:
+                pass
+        finally:
+            self.wave_close()
 
     def run(self, max_waves: int = 64,
             max_steps: Optional[int] = None) -> list[Request]:

@@ -56,6 +56,11 @@ class SimReport:
     idle_ws: float  # static draw charged for non-stepping wall time
     slo_total: int  # submitted requests carrying an SLO
     slo_violations: int  # end-to-end completion later than slo_s
+    # transfer cost of mid-flight slot migrations (bytes x link rate),
+    # billed to receiving engines — on the full bill, so a migration-happy
+    # policy cannot look cheap by hiding its moves
+    migration_ws: float = 0.0
+    migrations: int = 0  # slots moved mid-flight
     finish_s: dict[int, float] = field(default_factory=dict)  # rid -> t
     # (t, {engine: state}) every time an autoscaling tick changed anything
     power_log: list[tuple[float, dict[str, str]]] = field(default_factory=list)
@@ -63,8 +68,9 @@ class SimReport:
 
     @property
     def total_ws(self) -> float:
-        """The full bill: serving energy plus static idle energy."""
-        return self.energy_ws + self.idle_ws
+        """The full bill: serving energy plus static idle energy plus
+        migration transfer cost."""
+        return self.energy_ws + self.idle_ws + self.migration_ws
 
     @property
     def ws_per_1k_tokens(self) -> float:
@@ -78,6 +84,8 @@ def simulate(router: FleetRouter, trace: Sequence[TimedRequest], *,
              autoscale_every_s: Optional[float] = None,
              rate_window_s: Optional[float] = None,
              plan_times: Sequence[float] = (),
+             rebalance_every_s: Optional[float] = None,
+             rebalance_live: bool = False,
              min_step_s: float = 1e-9,
              max_events: int = 2_000_000) -> SimReport:
     """Replay ``trace`` against ``router`` on a virtual clock.
@@ -88,7 +96,12 @@ def simulate(router: FleetRouter, trace: Sequence[TimedRequest], *,
     ``autoscale_every_s`` enables control ticks: demand is the token sum of
     arrivals in the trailing ``rate_window_s`` (default 4 ticks) divided by
     the window. ``plan_times`` additionally runs full
-    ``router.plan(now=t)`` passes at the given times. ``min_step_s`` guards
+    ``router.plan(now=t)`` passes at the given times.
+    ``rebalance_every_s`` runs ``router.rebalance(include_saturated=True)``
+    at a fixed cadence — queue-drain by default, escalated to mid-flight
+    migration of admitted slots with ``rebalance_live=True`` (the
+    saturation-spike comparison ``benchmarks/migration_bench.py`` gates).
+    ``min_step_s`` guards
     the clock against placement-less engines modeling zero-duration steps.
     """
     bindings = router.bindings
@@ -100,6 +113,7 @@ def simulate(router: FleetRouter, trace: Sequence[TimedRequest], *,
         (4.0 * autoscale_every_s if autoscale_every_s else 1.0)
     arrivals: deque[tuple[float, int]] = deque()  # (t, token demand)
     next_tick = autoscale_every_s if autoscale_every_s else None
+    next_reb = rebalance_every_s if rebalance_every_s else None
     plan_q = deque(sorted(plan_times))
 
     avail = {b.name: 0.0 for b in bindings}  # earliest next step start
@@ -135,6 +149,8 @@ def simulate(router: FleetRouter, trace: Sequence[TimedRequest], *,
                     has_work or (horizon_s is not None
                                  and next_tick <= horizon_s)):
                 cands.append(next_tick)
+            if next_reb is not None and has_work:
+                cands.append(next_reb)
             if plan_q:
                 cands.append(plan_q[0])
             if not cands:
@@ -170,6 +186,10 @@ def simulate(router: FleetRouter, trace: Sequence[TimedRequest], *,
                         power_log.append((now, dict(states)))
                         last_states = dict(states)
                 next_tick += autoscale_every_s
+            while next_reb is not None and next_reb <= now:
+                router.rebalance(live=rebalance_live,
+                                 include_saturated=True, now=now)
+                next_reb += rebalance_every_s
 
             for b in bindings:
                 eng = b.engine
@@ -225,4 +245,6 @@ def simulate(router: FleetRouter, trace: Sequence[TimedRequest], *,
                      steps=steps, tokens=fleet.total_tokens,
                      energy_ws=fleet.energy_ws, idle_ws=fleet.idle_ws,
                      slo_total=slo_total, slo_violations=slo_violations,
+                     migration_ws=fleet.migration_ws,
+                     migrations=fleet.migrations_in,
                      finish_s=finish_s, power_log=power_log, fleet=fleet)

@@ -14,8 +14,9 @@ Three layers, mirroring analysis/concurrency.py + runtime/executor.py:
 3. Executor certification: FleetRouter.run(concurrent=True) is token- and
    ledger-identical to the sequential drain across dense/ssm/hybrid
    families, and a seed-deterministic interleaving fuzzer permutes thread
-   switch points across submit/plan/scale_to/step operations asserting the
-   fleet==Σengines ledger invariant under every schedule.
+   switch points across submit/plan/scale_to/step/migrate operations
+   asserting the fleet==Σengines ledger invariant (and, with mid-flight
+   migrations in play, exactly-once token billing) under every schedule.
 """
 import dataclasses
 import random
@@ -587,12 +588,39 @@ def run_schedule(fuzz_world, seed):
             if out:
                 finished.extend(out)
 
+    def try_migrate():
+        """Deterministic mid-flight move: the first occupied slot in
+        binding order hops to the first other engine with a free slot;
+        refusals (no free slot anywhere, target not awake) are tolerated —
+        they are deterministic too, so the schedule stays seed-stable."""
+        from repro.runtime import migration
+        for src_b in router.bindings:
+            s = src_b.engine._stream
+            if s is None:
+                continue
+            occ = [i for i, r in enumerate(s["slot_req"])
+                   if r is not None]
+            if not occ:
+                continue
+            for dst_b in router.bindings:
+                if dst_b.name == src_b.name:
+                    continue
+                if not migration.free_slots(dst_b.engine):
+                    continue
+                try:
+                    router.migrate_slot(src_b.name, occ[0], dst_b.name)
+                    return
+                except migration.MigrationError:
+                    continue
+            return
+
     scripts = [
         [lambda r=r: router.submit(r) for r in reqs],
         [step_all] * 5,
         [lambda: router.plan(),
          lambda: router.scale_to(1e9, now=next(clock)),
          lambda: router.plan()],
+        [try_migrate] * 4,
     ]
     order = run_interleaved(scripts, seed)
     # drain: step until every queue and slot is empty, then close sessions
@@ -619,6 +647,11 @@ def test_fuzzer_fleet_ledger_invariant_under_every_schedule(fuzz_world,
     assert len(outs) == 6  # all submitted requests finished exactly once
     assert len({rid for rid, *_ in outs}) == 6
     assert fleet["completed"] == 6
+    # mid-flight moves never double-bill: admissions count requests (not
+    # hops), every out-migration landed somewhere, and the token ledger
+    # is exactly the traffic served
+    assert fleet["admissions"] == 6
+    assert fleet["migrations_in"] == fleet["migrations_out"]
 
 
 def test_fuzzer_same_seed_same_schedule_same_ledger(fuzz_world):
